@@ -1,0 +1,57 @@
+"""Fig. 1 / App. G + App. H (scaled down): component-wise SLR behavior.
+
+(a) training loss with vs without the embedding layer included is unchanged
+    while the embedding still develops SLR structure (benign);
+(b) including the LM HEAD degrades the loss and/or fails to develop stable
+    structure (non-benign, App. H) — the asymmetry the paper characterizes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.selection import SelectionConfig
+
+from .common import bench_arch, emit, eval_loss, ppl, salaad_cfg, train_salaad
+
+
+def run(steps: int = 50) -> dict:
+    cfg = bench_arch()
+    out = {}
+    variants = {
+        "with_embed": SelectionConfig(min_dim=16, include_embedding=True),
+        "without_embed": SelectionConfig(min_dim=16, include_embedding=False),
+        "with_lm_head": SelectionConfig(
+            min_dim=16, include_embedding=True, include_lm_head=True
+        ),
+    }
+    for name, sel in variants.items():
+        scfg = salaad_cfg()
+        scfg = type(scfg)(**{**scfg.__dict__, "selection": sel})
+        tr, state = train_salaad(cfg, steps=steps, scfg=scfg)
+        ev = eval_loss(state.params, cfg)
+        emb_stats = {}
+        for bname, blk in state.slr.items():
+            if "embed" in bname or "lm_head" in bname:
+                live = int(np.sum(np.asarray(blk.s_vals) > 0))
+                nnz = int(np.sum(np.asarray(blk.s_coo.idx) >= 0))
+                emb_stats[bname] = {
+                    "rank_live": live,
+                    "nnz": nnz,
+                    "alpha": float(np.asarray(blk.alpha)),
+                }
+        out[name] = {"ppl": ppl(ev), "components": emb_stats}
+    return out
+
+
+def main(steps: int = 50):
+    res = run(steps)
+    for name, r in res.items():
+        comps = ";".join(
+            f"{k.split('/')[-1]}:rank={v['rank_live']},nnz={v['nnz']}"
+            for k, v in r["components"].items()
+        )
+        emit(f"fig1/{name}", 0.0, f"ppl={r['ppl']:.2f};{comps}")
+
+
+if __name__ == "__main__":
+    main()

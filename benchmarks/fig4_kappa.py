@@ -1,0 +1,34 @@
+"""Fig. 4 (scaled down): effect of the HPA allocation ratio kappa.
+
+Paper claim: optimal kappa sits in a narrow band with kappa > 0.5 (budget
+preferentially taken from the low-rank component), stable across budgets.
+"""
+from __future__ import annotations
+
+from repro.core.admm import surrogate_params
+from repro.core.hpa import hpa_keep_ratio
+
+from .common import bench_arch, emit, eval_loss, ppl, train_salaad
+
+
+def run(steps: int = 50, kappas=(0.0, 0.25, 0.5, 0.7, 0.9, 1.0), keeps=(0.7, 0.5)):
+    cfg = bench_arch()
+    tr, state = train_salaad(cfg, steps=steps)
+    rows = []
+    for keep in keeps:
+        for kappa in kappas:
+            slr_c, rep = hpa_keep_ratio(state.slr, tr.blocks, keep, kappa)
+            params_c = surrogate_params(state.params, slr_c, tr.blocks)
+            rows.append(
+                {"keep": keep, "kappa": kappa, "ppl": ppl(eval_loss(params_c, cfg))}
+            )
+    return rows
+
+
+def main(steps: int = 50):
+    for r in run(steps):
+        emit(f"fig4/keep={r['keep']}/kappa={r['kappa']}", 0.0, f"ppl={r['ppl']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

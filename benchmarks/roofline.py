@@ -1,0 +1,60 @@
+"""Roofline table assembled from the dry-run sweep (results/dryrun/*.json).
+
+Reads the per-cell compiled-artifact records and prints EXPERIMENTS.md's
+§Roofline table: the three terms, the dominant bottleneck, useful-FLOPs
+ratio, and per-device memory fit.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+HBM_LIMIT = 16e9  # v5e
+
+
+def load_records(pattern: str = "*") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"{pattern}.json"))):
+        with open(path) as f:
+            data = json.load(f)
+        recs.extend(data.get("records", []))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    fits = "Y" if (r.get("peak_memory_per_device") or 0) < HBM_LIMIT else "N"
+    return (
+        f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<9} "
+        f"{r['compute_s']:>9.4f} {r['memory_s']:>9.4f} {r['collective_s']:>9.4f} "
+        f"{r['dominant']:<10} {r['useful_flops_ratio']:>6.3f} "
+        f"{(r.get('peak_memory_per_device') or 0)/1e9:>7.2f} {fits}"
+    )
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("roofline/no-data,0.0,run scripts_sweep.sh first")
+        return
+    header = (
+        f"{'arch':<18} {'shape':<12} {'mesh':<9} "
+        f"{'compute_s':>9} {'memory_s':>9} {'collect_s':>9} {'dominant':<10} "
+        f"{'useful':>6} {'peakGB':>7} fit"
+    )
+    print(header)
+    for r in recs:
+        print(fmt_row(r))
+    # CSV lines for the harness contract
+    for r in recs:
+        print(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0.0,"
+            f"compute={r['compute_s']:.4f};memory={r['memory_s']:.4f};"
+            f"collective={r['collective_s']:.4f};dominant={r['dominant']};"
+            f"useful={r['useful_flops_ratio']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Use --quick for the CI-scale
+run (fewer steps), --only <name> to run a single benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer steps")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    steps = 30 if args.quick else 60
+
+    from . import (
+        appA_rpca,
+        fig1_embedding,
+        fig2_overhead,
+        fig3_elastic,
+        fig4_kappa,
+        roofline,
+        table1_pretrain,
+        table3_ablation,
+        table10_freq,
+    )
+
+    benches = {
+        "table1": lambda: table1_pretrain.main(steps),
+        "fig1": lambda: fig1_embedding.main(max(steps - 10, 20)),
+        "fig2": lambda: fig2_overhead.main(),
+        "fig3": lambda: fig3_elastic.main(steps),
+        "fig4": lambda: fig4_kappa.main(max(steps - 10, 20)),
+        "table3": lambda: table3_ablation.main(max(steps // 2, 20)),
+        "table10": lambda: table10_freq.main(max(steps // 2, 20)),
+        "appA": lambda: appA_rpca.main(max(steps // 2, 20)),
+        "roofline": roofline.main,
+    }
+    failures = 0
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}/FAILED,0.0,see-traceback")
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""App. I.2 (scaled down): ADMM update frequency K/J.
+
+Expected trends: smaller K (more frequent stage-2) => lower reconstruction
+error + stronger structure (lower rank/density), slightly worse task loss.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.admm import slr_param_count
+
+from .common import bench_arch, emit, eval_loss, ppl, salaad_cfg, train_salaad
+
+
+def run(steps: int = 40, ks=(2, 5, 10)) -> list[dict]:
+    cfg = bench_arch()
+    rows = []
+    for k in ks:
+        tr, state = train_salaad(cfg, steps=steps, scfg=salaad_cfg(update_every=k))
+        recon = [m["admm_recon_err"] for m in tr.metrics_log if "admm_recon_err" in m]
+        rows.append(
+            {
+                "K": k,
+                "ppl_x": ppl(eval_loss(state.params, cfg)),
+                "final_recon": recon[-1] if recon else float("nan"),
+                "slr_params": slr_param_count(state.slr, tr.blocks)["_total"],
+            }
+        )
+    return rows
+
+
+def main(steps: int = 40):
+    for r in run(steps):
+        emit(
+            f"table10/K={r['K']}", 0.0,
+            f"ppl_x={r['ppl_x']:.2f};recon={r['final_recon']:.3f};slr_params={r['slr_params']}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Tables 3/4/7-9 (scaled down): sensitivity to (dalpha, dbeta, rho).
+
+Expected paper trends: larger dalpha/dbeta/rho => more compression (fewer
+SLR params) at worse PPL; rho behaves like a global step-size multiplier.
+"""
+from __future__ import annotations
+
+from repro.core.admm import slr_param_count
+from repro.core.controller import ControllerConfig
+
+from .common import bench_arch, emit, eval_loss, ppl, salaad_cfg, train_salaad
+
+
+def run(steps: int = 40) -> list[dict]:
+    cfg = bench_arch()
+    rows = []
+
+    def one(tag, rho_constant=5.0, dalpha=0.1, dbeta=0.003):
+        scfg = salaad_cfg(rho_constant=rho_constant)
+        scfg = type(scfg)(
+            **{
+                **scfg.__dict__,
+                "controller": ControllerConfig(dalpha=dalpha, dbeta=dbeta),
+            }
+        )
+        tr, state = train_salaad(cfg, steps=steps, scfg=scfg)
+        surr = tr.surrogate(state)
+        rows.append(
+            {
+                "tag": tag,
+                "ppl_x": ppl(eval_loss(state.params, cfg)),
+                "ppl_ls": ppl(eval_loss(surr, cfg)),
+                "slr_params": slr_param_count(state.slr, tr.blocks)["_total"],
+            }
+        )
+
+    for db in (0.001, 0.01, 0.1):
+        one(f"dbeta={db}", dbeta=db)
+    for da in (0.05, 0.2, 0.8):
+        one(f"dalpha={da}", dalpha=da)
+    for rc in (1.0, 5.0, 25.0):
+        one(f"rho_c={rc}", rho_constant=rc)
+    return rows
+
+
+def main(steps: int = 40):
+    for r in run(steps):
+        emit(
+            f"table3/{r['tag']}", 0.0,
+            f"ppl_x={r['ppl_x']:.2f};ppl_ls={r['ppl_ls']:.2f};slr_params={r['slr_params']}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Elastic deployment (Fig. 3 in miniature): one SALAAD checkpoint, a sweep
+of parameter budgets, no retraining — the paper's headline capability.
+
+    PYTHONPATH=src python examples/elastic_deploy.py
+"""
+import jax
+
+from repro.configs.base import get_arch
+from repro.core.admm import SalaadConfig, surrogate_params
+from repro.core.hpa import hpa_keep_ratio, removable_params
+from repro.core.selection import SelectionConfig
+from repro.data.synthetic import DataConfig, SyntheticC4
+from repro.models import model as model_lib
+from repro.optim.adam import AdamConfig
+from repro.serving.slr_params import deployment_report
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    cfg = get_arch("salaad_llama_60m").reduced()
+    salaad = SalaadConfig(
+        selection=SelectionConfig(min_dim=16), rho_constant=0.5,
+        update_every=5, exact_svd=True,
+    )
+    trainer = Trainer(cfg, TrainerConfig(total_steps=50, salaad=salaad, adam=AdamConfig(lr=1e-3)))
+    state = trainer.init(jax.random.PRNGKey(0))
+    data = SyntheticC4(DataConfig(cfg.vocab_size, 32, 8))
+    state = trainer.fit(state, data)
+
+    def eval_loss(params):
+        return float(model_lib.loss_fn(params, data.batch(9999), cfg)[0])
+
+    c_l, c_s = removable_params(state.slr, trainer.blocks)
+    print(f"trained once; removable SLR params: L={c_l} S={c_s}")
+    print(f"{'keep':>6} {'slr_params':>10} {'loss':>8}   (single checkpoint, no retraining)")
+    for keep in (1.0, 0.85, 0.7, 0.55, 0.4, 0.25):
+        slr_c, rep = hpa_keep_ratio(state.slr, trainer.blocks, keep, kappa=0.7)
+        params_c = surrogate_params(state.params, slr_c, trainer.blocks)
+        print(f"{keep:>6.2f} {rep['params_after']:>10} {eval_loss(params_c):>8.3f}")
+
+    rep = deployment_report(state.params, state.slr, trainer.blocks)
+    print(
+        f"\ndeployment bytes: dense={rep['dense_total_bytes']/1e6:.2f}MB "
+        f"slr={rep['slr_total_bytes']/1e6:.2f}MB "
+        f"(compression x{rep['compression']:.2f})"
+    )
+
+
+if __name__ == "__main__":
+    main()

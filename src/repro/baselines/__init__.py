@@ -1,0 +1,9 @@
+"""Baselines the paper compares against (Table 1), as weight-space
+reparameterizations + optimizer transforms over the SAME model code."""
+from .reparam import (  # noqa: F401
+    FullRank,
+    GaLoreAdam,
+    LoRAReparam,
+    SLTrainReparam,
+    train_baseline,
+)

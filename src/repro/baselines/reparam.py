@@ -1,0 +1,313 @@
+"""Weight-space reparameterizations implementing the paper's baselines.
+
+Each baseline stores TRANSFORMED parameters and materializes the model's
+weight tree for the forward pass; autodiff flows through ``materialize``:
+
+  * FullRank        — identity (the paper's vanilla baseline)
+  * LoRAReparam     — W = sg(W0) + (alpha/r) B A; only (A, B) receive grads
+                      (LoRA used as a pretraining baseline, as in Table 1)
+  * SLTrainReparam  — W = B A + scatter(s_values at fixed random support)
+                      (SLTrain: fixed rank + fixed sparse support chosen
+                      before training — exactly the layer-agnostic scheduling
+                      SALAAD's I-controller replaces)
+  * GaLoreAdam      — full-rank W, but Adam moments live in a rank-r
+                      projected gradient space; the projector is refreshed
+                      from the gradient's randomized SVD every T steps.
+
+Selection reuses core/selection.py so every baseline touches exactly the
+blocks SALAAD would, on any architecture.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.rsvd import randomized_svd
+from ..core.selection import BlockInfo, SelectionConfig, select_blocks
+from ..optim.adam import AdamConfig, adam_update, init_adam
+
+
+def _set_leaf(params, path, value):
+    if not path:
+        return value
+    p = path[0]
+    key = getattr(p, "key", getattr(p, "idx", getattr(p, "name", None)))
+    if isinstance(params, dict):
+        out = dict(params)
+        out[key] = _set_leaf(params[key], path[1:], value)
+        return out
+    raise TypeError(type(params))
+
+
+def _get_leaf(params, path):
+    for p in path:
+        key = getattr(p, "key", getattr(p, "idx", getattr(p, "name", None)))
+        params = params[key]
+    return params
+
+
+class FullRank:
+    name = "full-rank"
+
+    def init(self, params, key):
+        return {"base": params}
+
+    def materialize(self, t):
+        return t["base"]
+
+    def param_count(self, t):
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(t["base"]))
+
+
+@dataclass
+class LoRAReparam:
+    rank: int = 8
+    alpha: float = 16.0
+    selection: SelectionConfig = None
+    name = "lora"
+
+    def init(self, params, key):
+        sel = self.selection or SelectionConfig(min_dim=16)
+        blocks = select_blocks(params, sel)
+        adapters = {}
+        for i, info in enumerate(blocks):
+            k = jax.random.fold_in(key, i)
+            r = min(self.rank, info.n, info.m)
+            adapters[info.name] = {
+                "a": jax.random.normal(k, (*info.stack_dims, r, info.m)) * 0.01,
+                "b": jnp.zeros((*info.stack_dims, info.n, r)),
+            }
+        return {"base": params, "adapters": adapters, "_blocks": blocks}
+
+    def materialize(self, t):
+        params = t["base"]
+        for info in t["_blocks"]:
+            ad = t["adapters"][info.name]
+            w0 = jax.lax.stop_gradient(_get_leaf(params, info.path))
+            r = ad["a"].shape[-2]
+            w = w0 + (self.alpha / r) * (ad["b"] @ ad["a"]).astype(w0.dtype)
+            params = _set_leaf(params, info.path, w)
+        return params
+
+    def param_count(self, t):
+        # deployable params: base + adapters (they merge at deploy time)
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(t["base"]))
+
+
+@dataclass
+class SLTrainReparam:
+    """Fixed rank-r + fixed random support density (Han et al. 2024 style)."""
+
+    rank_ratio: float = 0.15
+    density: float = 0.05
+    selection: SelectionConfig = None
+    name = "sltrain"
+
+    def init(self, params, key):
+        sel = self.selection or SelectionConfig(min_dim=16)
+        blocks = select_blocks(params, sel)
+        reps = {}
+        supports = {}
+        new_params = params
+        for i, info in enumerate(blocks):
+            k = jax.random.fold_in(key, i)
+            n, m = info.n, info.m
+            r = max(2, int(self.rank_ratio * min(n, m)))
+            nnz = max(4, int(self.density * n * m))
+            idx = jax.random.choice(
+                jax.random.fold_in(k, 1), n * m, (nnz,), replace=False
+            ).astype(jnp.int32)
+            stack = info.stack_dims
+            reps[info.name] = {
+                "b": jax.random.normal(k, (*stack, n, r)) / np.sqrt(r),
+                "a": jax.random.normal(jax.random.fold_in(k, 2), (*stack, r, m)) / np.sqrt(m),
+                "s_values": jnp.zeros((*stack, nnz)),
+            }
+            supports[info.name] = jnp.broadcast_to(idx, (*stack, nnz))
+            # base leaf replaced at materialize; drop it to zeros to save memory
+            new_params = _set_leaf(new_params, info.path, jnp.zeros(info.shape, jnp.float32) * 0)
+        return {"base": new_params, "reps": reps, "_blocks": blocks, "_support": supports}
+
+    def materialize(self, t):
+        params = t["base"]
+        for info in t["_blocks"]:
+            rep = t["reps"][info.name]
+            n, m = info.n, info.m
+            low = rep["b"] @ rep["a"]
+
+            def scatter(vals, idx):
+                return jnp.zeros((n * m,), vals.dtype).at[idx].add(vals).reshape(n, m)
+
+            fn = scatter
+            for _ in info.stack_dims:
+                fn = jax.vmap(fn)
+            sparse_part = fn(rep["s_values"], t["_support"][info.name])
+            w = (low + sparse_part).astype(_get_leaf(params, info.path).dtype)
+            params = _set_leaf(params, info.path, w)
+        return params
+
+    def param_count(self, t):
+        total = 0
+        covered = {b.name for b in t["_blocks"]}
+        for info in t["_blocks"]:
+            rep = t["reps"][info.name]
+            total += rep["b"].size + rep["a"].size + 2 * rep["s_values"].size  # values + idx
+        for path, leaf in jax.tree_util.tree_leaves_with_path(t["base"]):
+            from ..core.selection import path_str
+
+            if path_str(path) not in covered:
+                total += int(np.prod(leaf.shape))
+        return int(total)
+
+
+@dataclass
+class GaLoreAdam:
+    """Gradient low-rank projection (Zhao et al. 2024 style) around Adam."""
+
+    rank: int = 16
+    refresh_every: int = 50
+    selection: SelectionConfig = None
+    adam: AdamConfig = None
+    name = "galore"
+
+    def init_state(self, params, key):
+        sel = self.selection or SelectionConfig(min_dim=16)
+        self.blocks = select_blocks(params, sel)
+        projectors = {}
+        moments = {}
+        for i, info in enumerate(self.blocks):
+            r = min(self.rank, info.n, info.m)
+            k = jax.random.fold_in(key, i)
+            q, _ = jnp.linalg.qr(jax.random.normal(k, (info.n, r)))
+            projectors[info.name] = jnp.broadcast_to(q, (*info.stack_dims, info.n, r))
+            moments[info.name] = {
+                "mu": jnp.zeros((*info.stack_dims, r, info.m)),
+                "nu": jnp.zeros((*info.stack_dims, r, info.m)),
+            }
+        dense = init_adam(params)  # for non-selected leaves
+        return {"proj": projectors, "mom": moments, "dense": dense, "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, step: int):
+        cfg = self.adam or AdamConfig()
+        count = state["count"] + 1
+        b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+        b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+        new_params = params
+        new_proj = dict(state["proj"])
+        new_mom = dict(state["mom"])
+        sel_names = {b.name for b in self.blocks}
+        for info in self.blocks:
+            g = _get_leaf(grads, info.path).astype(jnp.float32)
+            p = state["proj"][info.name]
+            if step and step % self.refresh_every == 0:
+                # refresh projector from the current gradient's top subspace
+                def topq(gm, key):
+                    u, s, vt = randomized_svd(gm, key, p.shape[-1])
+                    return u
+
+                fn = topq
+                keys = jax.random.PRNGKey(step)
+                if info.stack_dims:
+                    nb = int(np.prod(info.stack_dims))
+                    fn = jax.vmap(topq)
+                    p = fn(
+                        g.reshape(nb, info.n, info.m), jax.random.split(keys, nb)
+                    ).reshape(*info.stack_dims, info.n, p.shape[-1])
+                else:
+                    p = topq(g, keys)
+                new_proj[info.name] = p
+            # project, adam in low-rank space, project back
+            gp = jnp.swapaxes(p, -1, -2) @ g            # (r, m)
+            mom = state["mom"][info.name]
+            mu = cfg.b1 * mom["mu"] + (1 - cfg.b1) * gp
+            nu = cfg.b2 * mom["nu"] + (1 - cfg.b2) * gp * gp
+            step_lr = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+            upd = p @ step_lr                            # back to (n, m)
+            w = _get_leaf(params, info.path)
+            new_params = _set_leaf(
+                new_params, info.path, (w.astype(jnp.float32) - cfg.lr * upd).astype(w.dtype)
+            )
+            new_mom[info.name] = {"mu": mu, "nu": nu}
+        # dense Adam for everything else
+        from ..core.selection import path_str
+
+        def mask_grad(path, gleaf):
+            return jnp.zeros_like(gleaf) if path_str(path) in sel_names else gleaf
+
+        masked = jax.tree_util.tree_map_with_path(mask_grad, grads)
+        dense_params, dense_state = adam_update(masked, state["dense"], new_params, cfg)
+        return dense_params, {
+            "proj": new_proj, "mom": new_mom, "dense": dense_state, "count": count
+        }
+
+
+def train_baseline(
+    method,
+    arch_cfg,
+    data,
+    steps: int,
+    key,
+    adam_cfg: AdamConfig = AdamConfig(lr=1e-3, grad_clip=1.0),
+    eval_batches: int = 4,
+):
+    """Train a baseline and return (final_eval_loss, param_count, losses)."""
+    from ..models import model as model_lib
+
+    params = model_lib.init_params(arch_cfg, key)
+
+    if isinstance(method, GaLoreAdam):
+        state = method.init_state(params, key)
+        losses = []
+
+        def loss_fn(p, batch):
+            return model_lib.loss_fn(p, batch, arch_cfg)[0]
+
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        for s in range(steps):
+            batch = data.batch(s)
+            loss, grads = grad_fn(params, batch)
+            params, state = method.update(grads, state, params, s)
+            losses.append(float(loss))
+        eval_loss = float(
+            np.mean([float(loss_fn(params, data.batch(50_000 + i))) for i in range(eval_batches)])
+        )
+        n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        return eval_loss, n_params, losses
+
+    t = method.init(params, key)
+    static_blocks = t.pop("_blocks", None)
+    static_support = t.pop("_support", None)
+
+    def loss_fn(tp, batch):
+        full = t_materialize(tp)
+        return model_lib.loss_fn(full, batch, arch_cfg)[0]
+
+    def t_materialize(tp):
+        tp2 = dict(tp)
+        if static_blocks is not None:
+            tp2["_blocks"] = static_blocks
+        if static_support is not None:
+            tp2["_support"] = jax.tree.map(jax.lax.stop_gradient, static_support)
+        return method.materialize(tp2)
+
+    opt = init_adam(t)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    jadam = jax.jit(lambda g, o, p: adam_update(g, o, p, adam_cfg))
+    losses = []
+    for s in range(steps):
+        batch = data.batch(s)
+        loss, grads = grad_fn(t, batch)
+        t, opt = jadam(grads, opt, t)
+        losses.append(float(loss))
+    eval_loss = float(
+        np.mean([float(loss_fn(t, data.batch(50_000 + i))) for i in range(eval_batches)])
+    )
+    if static_blocks is not None:
+        t["_blocks"] = static_blocks
+    if static_support is not None:
+        t["_support"] = static_support
+    return eval_loss, method.param_count(t), losses

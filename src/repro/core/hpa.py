@@ -1,0 +1,143 @@
+"""Homomorphic Parameter Allocation (HPA) — §4.3 + App. D.
+
+Deploy-time, continuous, architecture-preserving capacity control. Given a
+parameter-removal budget ``C`` and a mixing coefficient ``kappa``:
+
+    phi_L = kappa*C / C_L          phi_S = (1-kappa)*C / C_S
+
+where ``C_L`` / ``C_S`` are the total removable parameters in the low-rank /
+sparse components. Footnote 3's feasibility rule is implemented: if either
+ratio exceeds 1, the surplus budget is reassigned to the other component
+(always feasible when C <= C_L + C_S).
+
+Per block the SAME global fractions are applied (Remark 4.2 — "homomorphism"
+preserves learned block heterogeneity): the smallest ``phi_L`` fraction of
+singular values and the smallest ``phi_S`` fraction of sparse entries (by
+magnitude — the paper's importance proxy I(u) ∝ |u|) are removed.
+
+Parameter cost accounting uses the *deployed* representation: a rank unit of
+an (n, m) block costs (n + m) parameters (one column of U·diag(s) plus one
+row of Vᵀ); a sparse unit costs 1 value (+4 bytes of index, reported
+separately as overhead, matching how the paper counts PRM).
+
+Runs eagerly (deployment path) — no jit required, works on CPU hosts.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import sparse
+from .admm import BlockSLR, SLRState
+from .selection import BlockInfo
+
+__all__ = ["removable_params", "hpa_compress", "hpa_keep_ratio"]
+
+
+def removable_params(state: SLRState, blocks: list[BlockInfo]) -> tuple[int, int]:
+    """(C_L, C_S): removable parameter totals across blocks."""
+    c_l = 0
+    c_s = 0
+    for info in blocks:
+        blk = state[info.name]
+        live_rank = int(np.sum(np.asarray(blk.s_vals) > 0))
+        c_l += live_rank * (info.n + info.m)
+        c_s += int(np.sum(np.asarray(blk.s_coo.idx) >= 0))
+    return c_l, c_s
+
+
+def _split_budget(c: int, kappa: float, c_l: int, c_s: int) -> tuple[float, float]:
+    """Global ratios with footnote-3 surplus reassignment."""
+    if c > c_l + c_s:
+        raise ValueError(f"budget C={c} exceeds removable params {c_l + c_s}")
+    bl, bs = kappa * c, (1.0 - kappa) * c
+    if c_l > 0 and bl > c_l:
+        bs += bl - c_l
+        bl = c_l
+    if c_s > 0 and bs > c_s:
+        bl += bs - c_s
+        bl = min(bl, c_l)
+        bs = c_s
+    phi_l = bl / c_l if c_l > 0 else 0.0
+    phi_s = bs / c_s if c_s > 0 else 0.0
+    return min(phi_l, 1.0), min(phi_s, 1.0)
+
+
+def _truncate_block(blk: BlockSLR, info: BlockInfo, phi_l: float, phi_s: float) -> BlockSLR:
+    """Remove the smallest phi_l fraction of singular values and phi_s fraction
+    of sparse entries, per stacked slice, by magnitude."""
+    s_vals = np.asarray(blk.s_vals, np.float64)          # (..., r)
+    live = s_vals > 0
+    # Per slice: keep ceil((1 - phi_l) * live) largest singular values.
+    live_counts = live.sum(axis=-1)                       # (...,)
+    keep_counts = np.ceil((1.0 - phi_l) * live_counts).astype(np.int64)
+    order = np.argsort(-s_vals, axis=-1)                  # descending
+    ranks = np.empty_like(order)
+    np.put_along_axis(ranks, order, np.arange(s_vals.shape[-1])[(None,) * (s_vals.ndim - 1)] * np.ones_like(order), axis=-1)
+    keep_mask_l = ranks < keep_counts[..., None]
+    keep_mask_l &= live
+
+    new_s_vals = np.where(keep_mask_l, s_vals, 0.0)
+    # rescale p columns: p = U diag(s); zeroing a singular value zeroes its column.
+    scale = np.where(s_vals > 0, new_s_vals / np.maximum(s_vals, 1e-30), 0.0)
+    new_p = np.asarray(blk.p) * scale[..., None, :]
+
+    vals = np.asarray(blk.s_coo.values, np.float64)       # (..., cap)
+    idx = np.asarray(blk.s_coo.idx)
+    live_s = idx >= 0
+    mags = np.where(live_s, np.abs(vals), -np.inf)
+    live_s_counts = live_s.sum(axis=-1)
+    keep_s_counts = np.floor((1.0 - phi_s) * live_s_counts).astype(np.int64)
+    order_s = np.argsort(-mags, axis=-1)
+    ranks_s = np.empty_like(order_s)
+    np.put_along_axis(ranks_s, order_s, np.arange(mags.shape[-1])[(None,) * (mags.ndim - 1)] * np.ones_like(order_s), axis=-1)
+    keep_mask_s = (ranks_s < keep_s_counts[..., None]) & live_s
+
+    new_vals = np.where(keep_mask_s, vals, 0.0)
+    new_idx = np.where(keep_mask_s, idx, -1).astype(np.int32)
+
+    return replace(
+        blk,
+        p=jnp.asarray(new_p, blk.p.dtype),
+        s_vals=jnp.asarray(new_s_vals, blk.s_vals.dtype),
+        s_coo=sparse.CooMatrix(
+            jnp.asarray(new_vals, blk.s_coo.values.dtype),
+            jnp.asarray(new_idx),
+            blk.s_coo.shape,
+        ),
+    )
+
+
+def hpa_compress(
+    state: SLRState,
+    blocks: list[BlockInfo],
+    remove_budget: int,
+    kappa: float,
+) -> tuple[SLRState, dict]:
+    """HPA truncation under a parameter-removal budget. Returns (state, report)."""
+    c_l, c_s = removable_params(state, blocks)
+    phi_l, phi_s = _split_budget(remove_budget, kappa, c_l, c_s)
+    new_state: SLRState = dict(state)
+    for info in blocks:
+        new_state[info.name] = _truncate_block(state[info.name], info, phi_l, phi_s)
+    c_l2, c_s2 = removable_params(new_state, blocks)
+    report = {
+        "phi_L": phi_l,
+        "phi_S": phi_s,
+        "params_before": c_l + c_s,
+        "params_after": c_l2 + c_s2,
+        "removed": (c_l + c_s) - (c_l2 + c_s2),
+        "index_overhead_entries": c_s2,  # one int32 per surviving sparse entry
+    }
+    return new_state, report
+
+
+def hpa_keep_ratio(
+    state: SLRState, blocks: list[BlockInfo], keep_ratio: float, kappa: float
+) -> tuple[SLRState, dict]:
+    """Convenience: keep ``keep_ratio`` of the current SLR parameter count."""
+    c_l, c_s = removable_params(state, blocks)
+    budget = int(round((1.0 - keep_ratio) * (c_l + c_s)))
+    return hpa_compress(state, blocks, budget, kappa)

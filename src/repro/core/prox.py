@@ -1,0 +1,91 @@
+"""Proximal operators and structural statistics for SALAAD.
+
+These are the closed-form building blocks of Algorithm 1's second stage:
+
+  * ``soft_threshold``      — prox of ``tau * ||.||_1`` (element-wise shrinkage)
+  * ``svt``                 — prox of ``tau * ||.||_*`` (singular value thresholding)
+  * ``effective_rank_ratio``— Definition 4.1 (energy-coverage effective rank)
+  * ``density``             — fraction of nonzeros of the sparse component
+
+Everything is pure ``jnp`` and jit/vmap-safe: shapes are static, and the
+energy-coverage argmin is expressed as a mask-sum rather than data-dependent
+control flow so it lowers cleanly under ``pjit``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "soft_threshold",
+    "svt",
+    "svt_from_svd",
+    "effective_rank_ratio",
+    "effective_rank_ratio_from_singular_values",
+    "density",
+]
+
+
+def soft_threshold(z: jax.Array, tau: jax.Array | float) -> jax.Array:
+    """prox_{tau |.|_1}(z) = sign(z) * max(|z| - tau, 0), element-wise."""
+    tau = jnp.asarray(tau, dtype=z.dtype)
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0)
+
+
+def svt_from_svd(u: jax.Array, s: jax.Array, vt: jax.Array, tau) -> tuple[jax.Array, jax.Array]:
+    """Apply singular-value soft thresholding given an existing SVD.
+
+    Returns ``(s_thr, L)`` where ``s_thr = (s - tau)_+`` and
+    ``L = u @ diag(s_thr) @ vt``.
+    """
+    s_thr = jnp.maximum(s - jnp.asarray(tau, dtype=s.dtype), 0)
+    return s_thr, (u * s_thr[None, :]) @ vt
+
+
+def svt(z: jax.Array, tau) -> tuple[jax.Array, jax.Array]:
+    """prox_{tau |.|_*}(z) via full SVD. Returns ``(s_thr, L)``.
+
+    Exact reference path; the scalable training path uses ``rsvd.randomized_svd``
+    (see :mod:`repro.core.rsvd`) which only touches the top of the spectrum.
+    """
+    u, s, vt = jnp.linalg.svd(z, full_matrices=False)
+    return svt_from_svd(u, s, vt, tau)
+
+
+def effective_rank_ratio_from_singular_values(
+    s: jax.Array, gamma: float = 0.999, denom: int | None = None
+) -> jax.Array:
+    """Definition 4.1 on a given (non-negative, any order) singular value vector.
+
+    Gamma-energy effective rank ratio:
+        min{k : sum_{i<=k} sigma_i / sum_j sigma_j >= gamma} / denom
+
+    ``denom`` defaults to ``len(s)``; pass ``min(n, m)`` when ``s`` is a
+    truncated spectrum (e.g. from the rank-capped randomized SVD — the tail is
+    exactly zero in L, so the energy count is exact while the ratio must still
+    be taken against the full matrix dimension).
+
+    Implemented branch-free: sort descending, cumulative ratio, count entries
+    strictly below the coverage target, +1 for the crossing index. An all-zero
+    spectrum yields ratio 0 (the matrix is rank 0).
+    """
+    s = jnp.sort(jnp.abs(s), axis=-1)[..., ::-1]
+    total = jnp.sum(s, axis=-1, keepdims=True)
+    csum = jnp.cumsum(s, axis=-1)
+    # k = 1 + (#prefix sums with coverage < gamma); guard total == 0.
+    covered = csum >= gamma * total
+    k = jnp.where(total[..., 0] > 0, 1 + jnp.sum(~covered[..., :-1], axis=-1), 0)
+    # if even the first singular value covers gamma, k == 1 as required.
+    d = denom if denom is not None else s.shape[-1]
+    return k.astype(jnp.float32) / d
+
+
+def effective_rank_ratio(mat: jax.Array, gamma: float = 0.999) -> jax.Array:
+    """Definition 4.1 for a dense matrix (computes singular values)."""
+    s = jnp.linalg.svd(mat, compute_uv=False)
+    return effective_rank_ratio_from_singular_values(s, gamma)
+
+
+def density(mat: jax.Array, eps: float = 0.0) -> jax.Array:
+    """Fraction of entries with |x| > eps (Upsilon_S in the paper)."""
+    return jnp.mean((jnp.abs(mat) > eps).astype(jnp.float32))

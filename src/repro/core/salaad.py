@@ -1,0 +1,58 @@
+"""High-level SALAAD API: wrap any (loss_fn, optimizer) into Algorithm 1.
+
+The plug-and-play contract:
+
+    salaad = Salaad(cfg)
+    slr_state, blocks = salaad.init(params)
+    loss = task_loss(params, batch) + salaad.penalty(params, slr_state)   # stage 1
+    ...every K steps...
+    slr_state, stats = salaad.update(params, slr_state, step)             # stage 2
+    deploy = salaad.surrogate(params, slr_state)                          # L + S
+    deploy_small, report = salaad.compress(slr_state, budget, kappa)      # HPA
+
+No model or optimizer internals are touched — the framework's trainer uses
+exactly this interface, and so can any external training loop.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+
+from . import admm, hpa
+from .admm import SalaadConfig, SLRState
+from .selection import BlockInfo
+
+__all__ = ["Salaad", "SalaadConfig"]
+
+
+@dataclass
+class Salaad:
+    cfg: SalaadConfig = field(default_factory=SalaadConfig)
+    blocks: list[BlockInfo] | None = None
+
+    def init(self, params: Any) -> SLRState:
+        state, blocks = admm.init_slr_state(params, self.cfg)
+        self.blocks = blocks
+        return state
+
+    def penalty(self, params: Any, state: SLRState) -> jax.Array:
+        assert self.blocks is not None, "call init() first"
+        return admm.penalty(params, state, self.blocks)
+
+    def update(self, params: Any, state: SLRState, step) -> tuple[SLRState, dict]:
+        assert self.blocks is not None
+        return admm.admm_update(params, state, self.blocks, self.cfg, step)
+
+    def surrogate(self, params: Any, state: SLRState) -> Any:
+        assert self.blocks is not None
+        return admm.surrogate_params(params, state, self.blocks)
+
+    def compress(self, state: SLRState, remove_budget: int, kappa: float):
+        assert self.blocks is not None
+        return hpa.hpa_compress(state, self.blocks, remove_budget, kappa)
+
+    def param_count(self, state: SLRState) -> dict:
+        assert self.blocks is not None
+        return admm.slr_param_count(state, self.blocks)

@@ -1,0 +1,130 @@
+"""Block selection: discover SALAAD-managed weight blocks in ANY param pytree.
+
+This is what makes SALAAD "plug-and-play" (the paper's central framing): the
+core never sees model code. We walk an arbitrary parameter pytree and select
+every leaf that looks like a linear-map weight:
+
+  * trailing two dims are the matrix ``(n, m)``;
+  * any leading dims are *stacked* block axes (scan-stacked layers produce
+    ``(L, n, m)``; stacked MoE experts produce ``(E, n, m)`` or ``(L, E, n, m)``)
+    — each slice is an independent ADMM block with its own ``(alpha, beta)``,
+    exactly matching the paper's block-wise I-controller;
+  * path-based include/exclude regexes implement the paper's component policy
+    (embedding included by default per §5.1; LM head excluded per App. H).
+
+``N`` in the rho scaling law (Eq. 7) counts *logical* blocks, i.e. stacked
+slices count individually.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["SelectionConfig", "BlockInfo", "select_blocks", "path_str"]
+
+
+@dataclass(frozen=True)
+class SelectionConfig:
+    """Which leaves become SALAAD blocks."""
+
+    min_dim: int = 8               # both matrix dims must be >= this
+    include_embedding: bool = True  # paper §5.1: embedding is benignly SLR-inducible
+    include_lm_head: bool = False   # paper App. H: LM head is NOT benign; default off
+    extra_exclude: tuple[str, ...] = ()   # additional path regexes to skip
+    extra_include: tuple[str, ...] = ()   # path regexes that force inclusion
+
+    # Path fragments identifying special components (matched case-insensitively).
+    embedding_patterns: tuple[str, ...] = ("embed",)
+    lm_head_patterns: tuple[str, ...] = ("lm_head", "unembed", "output_head")
+    # 1-D bias/norm leaves are excluded by the ndim rule automatically; conv &
+    # frontend stubs are excluded by name.
+    default_exclude: tuple[str, ...] = ("norm", "scale", "bias", "conv", "frontend", "a_log", "dt_")
+
+
+@dataclass(frozen=True)
+class BlockInfo:
+    """Static metadata for one selected leaf (possibly a stack of blocks)."""
+
+    path: tuple[Any, ...]          # jax.tree_util key path
+    name: str                      # '/'-joined readable path
+    shape: tuple[int, ...]         # full leaf shape
+    stack_dims: tuple[int, ...]    # leading stacked axes ( () for a plain matrix )
+    n: int                         # matrix rows
+    m: int                         # matrix cols
+    is_embedding: bool = False
+
+    @property
+    def num_blocks(self) -> int:
+        return int(np.prod(self.stack_dims)) if self.stack_dims else 1
+
+    @property
+    def matrix_params(self) -> int:
+        return self.n * self.m
+
+
+def path_str(path: tuple[Any, ...]) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _matches(name: str, patterns: tuple[str, ...]) -> bool:
+    low = name.lower()
+    return any(re.search(p, low) for p in patterns)
+
+
+def select_blocks(params: Any, cfg: SelectionConfig = SelectionConfig()) -> list[BlockInfo]:
+    """Return BlockInfo for every selected leaf, in deterministic path order."""
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    out: list[BlockInfo] = []
+    for path, leaf in leaves:
+        shape = tuple(getattr(leaf, "shape", ()))
+        if len(shape) < 2:
+            continue
+        name = path_str(path)
+        n, m = shape[-2], shape[-1]
+        if min(n, m) < cfg.min_dim:
+            continue
+        forced = _matches(name, cfg.extra_include) if cfg.extra_include else False
+        if not forced:
+            if _matches(name, cfg.default_exclude) or (
+                cfg.extra_exclude and _matches(name, cfg.extra_exclude)
+            ):
+                continue
+            if _matches(name, cfg.lm_head_patterns) and not cfg.include_lm_head:
+                continue
+            is_emb = _matches(name, cfg.embedding_patterns)
+            if is_emb and not cfg.include_embedding:
+                continue
+        else:
+            is_emb = _matches(name, cfg.embedding_patterns)
+        out.append(
+            BlockInfo(
+                path=path,
+                name=name,
+                shape=shape,
+                stack_dims=shape[:-2],
+                n=n,
+                m=m,
+                is_embedding=is_emb,
+            )
+        )
+    out.sort(key=lambda b: b.name)
+    return out
+
+
+def total_logical_blocks(blocks: list[BlockInfo]) -> int:
+    """N in the rho scaling law (Eq. 7): stacked slices count individually."""
+    return sum(b.num_blocks for b in blocks)

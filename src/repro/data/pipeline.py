@@ -1,0 +1,91 @@
+"""Host-side input pipeline: background prefetch + device placement.
+
+Training is GIL-friendly here (the generator is numpy), so a single
+background thread hides batch synthesis/tokenization behind the device step
+— the standard double-buffering that keeps TPUs fed. ``DevicePrefetcher``
+optionally device_puts with the batch shardings so the host→HBM transfer
+overlaps the previous step too.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator
+
+import jax
+
+
+class Prefetcher:
+    """Wrap a ``batch(step)`` source with an N-deep background queue."""
+
+    def __init__(self, source, start_step: int = 0, depth: int = 2):
+        self._source = source
+        self._queue: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._source.batch(step)
+            while not self._stop.is_set():
+                try:
+                    self._queue.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        step, batch = self._queue.get()
+        return batch
+
+    def batch(self, step: int) -> dict:
+        """Trainer-compatible access: serves from the queue when the step
+        matches the stream position, falls back to direct synthesis for
+        out-of-order requests (e.g. right after a restore)."""
+        while True:
+            got_step, batch = self._queue.get()
+            if got_step == step:
+                return batch
+            if got_step > step:  # restored earlier than the stream: direct
+                return self._source.batch(step)
+            # got_step < step: drain stale entries
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._queue.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)
+
+
+class DevicePrefetcher(Prefetcher):
+    """Prefetcher that also places batches on device (optionally sharded)."""
+
+    def __init__(self, source, shardings: Any = None, **kw):
+        self._shardings = shardings
+        super().__init__(source, **kw)
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._source.batch(step)
+            if self._shardings is not None:
+                batch = jax.device_put(batch, self._shardings)
+            else:
+                batch = jax.device_put(batch)
+            while not self._stop.is_set():
+                try:
+                    self._queue.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1

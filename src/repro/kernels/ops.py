@@ -1,0 +1,64 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to auto: Pallas interpret mode when no TPU is attached
+(this container), compiled Mosaic on real TPU. Models and the serving engine
+call these through the ``kernel_impl`` config switch; everything falls back to
+the pure-jnp reference implementations under ``kernel_impl='xla'`` so pjit /
+GSPMD sharding is never blocked by a kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+from .bsr_matmul import BsrMatrix, bsr_from_dense, bsr_matmul_pallas, bsr_to_dense
+from .flash_attention import flash_attention_pallas
+from .lowrank_matmul import lowrank_matmul_pallas
+from .soft_threshold import soft_threshold_pallas
+
+__all__ = [
+    "BsrMatrix",
+    "bsr_from_dense",
+    "bsr_to_dense",
+    "soft_threshold",
+    "lowrank_matmul",
+    "bsr_matmul",
+    "flash_attention",
+    "bsr_occupancy",
+]
+
+
+@functools.cache
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def soft_threshold(x, tau, interpret: bool | None = None):
+    return soft_threshold_pallas(
+        x, tau, interpret=_auto_interpret() if interpret is None else interpret
+    )
+
+
+def lowrank_matmul(x, p, vt, interpret: bool | None = None, **kw):
+    return lowrank_matmul_pallas(
+        x, p, vt, interpret=_auto_interpret() if interpret is None else interpret, **kw
+    )
+
+
+def bsr_matmul(x, bsr: BsrMatrix, interpret: bool | None = None, **kw):
+    return bsr_matmul_pallas(
+        x, bsr, interpret=_auto_interpret() if interpret is None else interpret, **kw
+    )
+
+
+def flash_attention(q, k, v, causal=True, interpret: bool | None = None, **kw):
+    return flash_attention_pallas(
+        q, k, v, causal=causal,
+        interpret=_auto_interpret() if interpret is None else interpret, **kw
+    )
+
+
+def bsr_occupancy(bsr: BsrMatrix) -> float:
+    return bsr.occupancy

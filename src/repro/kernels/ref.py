@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def soft_threshold_ref(x: jax.Array, tau) -> jax.Array:
+    tau = jnp.asarray(tau, x.dtype)
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - tau, 0)
+
+
+def lowrank_matmul_ref(x: jax.Array, p: jax.Array, vt: jax.Array) -> jax.Array:
+    return (x.astype(jnp.float32) @ p.astype(jnp.float32) @ vt.astype(jnp.float32)).astype(x.dtype)
+
+
+def bsr_matmul_ref(x: jax.Array, bsr) -> jax.Array:
+    """Scatter the blocks to dense, then dense matmul."""
+    from .bsr_matmul import bsr_to_dense
+
+    dense = bsr_to_dense(bsr)
+    return (x.astype(jnp.float32) @ dense.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True, scale=None
+) -> jax.Array:
+    """Dense softmax attention with GQA broadcast — O(T*S) memory."""
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum(
+        "bhtd,bhsd->bhts", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, s), bool), k=s - t)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", w, v.astype(jnp.float32)).astype(q.dtype)

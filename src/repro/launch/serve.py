@@ -1,0 +1,86 @@
+"""Serving launcher: load a checkpoint (or fresh init), optionally deploy the
+SLR surrogate at a parameter budget (HPA), and serve batched requests.
+
+  python -m repro.launch.serve --arch salaad_llama_60m --reduced \
+      --keep-ratio 0.6 --kappa 0.7 --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core.admm import SalaadConfig, init_slr_state, surrogate_params
+from repro.core.hpa import hpa_keep_ratio
+from repro.core.selection import SelectionConfig
+from repro.models import model as model_lib
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.slr_params import deployment_report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--keep-ratio", type=float, default=None, help="HPA budget")
+    ap.add_argument("--kappa", type=float, default=0.7)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    key = jax.random.PRNGKey(args.seed)
+    params = model_lib.init_params(cfg, key)
+
+    if args.ckpt_dir:
+        from repro.train import checkpoint
+        from repro.train.state import init_train_state
+
+        scfg = SalaadConfig(selection=SelectionConfig(min_dim=16))
+        state, blocks = init_train_state(params, scfg)
+        state = checkpoint.restore(args.ckpt_dir, state)
+        slr, params = state.slr, state.params
+    else:
+        scfg = SalaadConfig(selection=SelectionConfig(min_dim=16))
+        slr, blocks = init_slr_state(params, scfg)
+
+    if args.keep_ratio is not None:
+        slr, report = hpa_keep_ratio(slr, blocks, args.keep_ratio, args.kappa)
+        print("HPA:", json.dumps(report))
+        params = surrogate_params(params, slr, blocks)
+        print("deployment:", json.dumps(
+            {k: v for k, v in deployment_report(params, slr, blocks).items() if k != "blocks"}
+        ))
+
+    engine = ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=64))
+    rng = np.random.RandomState(args.seed)
+    for _ in range(args.requests):
+        prompt = rng.randint(0, cfg.vocab_size, size=rng.randint(2, 8)).tolist()
+        engine.submit(prompt, max_new_tokens=args.max_new)
+    t0 = time.time()
+    done = engine.run()
+    dt = time.time() - t0
+    total_tokens = sum(len(r.out_tokens) for r in done)
+    print(
+        json.dumps(
+            {
+                "requests": len(done),
+                "tokens": total_tokens,
+                "tok_per_s": round(total_tokens / max(dt, 1e-9), 2),
+                "sample": done[0].out_tokens if done else [],
+            }
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM backbones."""
+from . import attention, encdec, hybrid, layers, model, moe, ssm, ssm_lm, transformer  # noqa: F401

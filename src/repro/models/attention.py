@@ -1,0 +1,236 @@
+"""Attention: GQA projections + blockwise (memory-efficient) softmax.
+
+Three execution paths, one set of weights:
+  * ``blockwise_attention`` — pure-JAX flash algorithm (double lax.scan over
+    q/kv chunks). This is the pjit/GSPMD default: it never materializes the
+    (T, S) score matrix, which is what lets the prefill_32k cells fit HBM.
+  * ``repro.kernels.flash_attention`` — Pallas TPU kernel (kernel_impl='pallas').
+  * ``dense path`` — plain softmax for tiny smoke shapes (kernel_impl='dense').
+
+Decode: single-token query against a preallocated KV cache, O(S) einsum.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_rope
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, Hkv, S, D)
+    v: jax.Array  # (B, Hkv, S, D)
+    length: jax.Array  # () int32 — valid prefix
+
+
+def init_qkv(key, d_model, n_heads, n_kv, head_dim, dtype, bias=False):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d_model)
+    so = 1.0 / np.sqrt(n_heads * head_dim)
+    p = {
+        "q": (jax.random.normal(kq, (d_model, n_heads * head_dim)) * s).astype(dtype),
+        "k": (jax.random.normal(kk, (d_model, n_kv * head_dim)) * s).astype(dtype),
+        "v": (jax.random.normal(kv, (d_model, n_kv * head_dim)) * s).astype(dtype),
+        "o": (jax.random.normal(ko, (n_heads * head_dim, d_model)) * so).astype(dtype),
+    }
+    if bias:
+        p["q_bias"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["k_bias"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["v_bias"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def _proj(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def blockwise_attention(
+    q: jax.Array,  # (B, Hq, T, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,
+    causal: bool = True,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    causal_offset: int = 0,
+) -> jax.Array:
+    """Flash-style attention in pure jnp; O(T*D) memory, scores never stored.
+
+    ``causal_offset``: query position i attends to keys <= i + offset (used
+    when T < S, e.g. chunked prefill against a longer cache).
+    """
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    scale = 1.0 / np.sqrt(d)
+    bq = min(q_block, t)
+    bk = min(kv_block, s)
+    # pad to block multiples
+    t_pad, s_pad = -t % bq, -s % bk
+    if t_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+    if s_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+    tq, sk = q.shape[2], k.shape[2]
+    nq, nk = tq // bq, sk // bk
+
+    qb = q.reshape(b, hkv, group, nq, bq, d).astype(jnp.float32) * scale
+    kb = k.reshape(b, hkv, nk, bk, d).astype(jnp.float32)
+    vb = v.reshape(b, hkv, nk, bk, d).astype(jnp.float32)
+
+    q_pos = jnp.arange(tq).reshape(nq, bq)
+    k_pos = jnp.arange(sk).reshape(nk, bk)
+    valid_k = (k_pos < s)  # padding mask (nk, bk)
+
+    def q_step(_, qi):
+        q_i = qb[:, :, :, qi]          # (b, hkv, group, bq, d)
+        qp = q_pos[qi]                  # (bq,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_i = kb[:, :, ki]          # (b, hkv, bk, d)
+            v_i = vb[:, :, ki]
+            sc = jnp.einsum("bhgqd,bhkd->bhgqk", q_i, k_i)
+            mask = valid_k[ki][None, None, None, None, :]
+            if causal:
+                cm = (qp[:, None] + causal_offset) >= k_pos[ki][None, :]
+                mask = jnp.logical_and(mask, cm[None, None, None])
+            sc = jnp.where(mask, sc, NEG_INF)
+            m_cur = jnp.max(sc, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            p = jnp.exp(sc - m_new)
+            corr = jnp.exp(m - m_new)
+            l_new = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = corr * acc + jnp.einsum("bhgqk,bhkd->bhgqd", p, v_i)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hkv, group, bq, 1), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, group, bq, 1), jnp.float32),
+            jnp.zeros((b, hkv, group, bq, d), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        return None, acc / jnp.maximum(l, 1e-30)
+
+    _, out = jax.lax.scan(q_step, None, jnp.arange(nq))  # (nq, b, hkv, g, bq, d)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, tq, d)
+    return out[:, :, :t].astype(q.dtype)
+
+
+def dense_attention(q, k, v, causal=True):
+    """Small-shape oracle path."""
+    from ..kernels.ref import attention_ref
+
+    return attention_ref(q, k, v, causal=causal)
+
+
+def attention_block(
+    params: dict,
+    x: jax.Array,                 # (B, T, d_model)
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    positions: jax.Array | None = None,
+    rope_theta: float | None = 1e4,
+    causal: bool = True,
+    cache: KVCache | None = None,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,  # cross-attention
+    kernel_impl: str = "blockwise",
+    q_block: int = 512,
+    kv_block: int = 1024,
+    causal_scheme: str = "full",
+) -> tuple[jax.Array, KVCache | None]:
+    """Full attention sub-block: projections + rope + attention + output.
+
+    * training/prefill: cache is None (or preallocated for prefill fill-in)
+    * decode: cache holds S past positions; x is (B, 1, d)
+    * cross-attention: kv_override supplies precomputed (k, v) heads
+    """
+    b, t, _ = x.shape
+    q = _proj(x, params["q"], params.get("q_bias"))
+    q = q.reshape(b, t, n_heads, head_dim)
+
+    if kv_override is not None:
+        kh, vh = kv_override  # (B, Hkv, S, D)
+        new_cache = cache
+    else:
+        k = _proj(x, params["k"], params.get("k_bias")).reshape(b, t, n_kv, head_dim)
+        v = _proj(x, params["v"], params.get("v_bias")).reshape(b, t, n_kv, head_dim)
+        if positions is None:
+            positions = jnp.arange(t)[None, :]
+        if rope_theta is not None:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+        kh = k.transpose(0, 2, 1, 3)  # (B, Hkv, T, D)
+        vh = v.transpose(0, 2, 1, 3)
+        if cache is not None:
+            # insert at cache.length (decode: t == 1; chunked prefill: t == chunk)
+            kc = jax.lax.dynamic_update_slice(
+                cache.k, kh.astype(cache.k.dtype), (0, 0, cache.length, 0)
+            )
+            vc = jax.lax.dynamic_update_slice(
+                cache.v, vh.astype(cache.v.dtype), (0, 0, cache.length, 0)
+            )
+            new_cache = KVCache(kc, vc, cache.length + t)
+            kh, vh = kc, vc
+        else:
+            new_cache = None
+
+    qh = q.transpose(0, 2, 1, 3)  # (B, Hq, T, D)
+
+    if cache is not None and kv_override is None:
+        if t > 1:
+            # chunked prefill into a cache: the dense masked-score path would
+            # materialize (T, S) scores (34 GB/device measured on zamba2
+            # prefill_32k) — use the flash path with a causal offset so query
+            # i attends keys <= cache.length + i.
+            from .flash_vjp import flash_attention_jax
+
+            out = flash_attention_jax(
+                qh, kh, vh, True, q_block, kv_block, cache.length, "full"
+            )
+        else:
+            # single-token decode: O(S) masked einsum
+            s = kh.shape[2]
+            scale = 1.0 / np.sqrt(head_dim)
+            group = n_heads // n_kv
+            qg = qh.reshape(b, n_kv, group, t, head_dim).astype(jnp.float32) * scale
+            sc = jnp.einsum("bhgtd,bhsd->bhgts", qg, kh.astype(jnp.float32))
+            k_idx = jnp.arange(s)[None, :]
+            q_idx = cache.length + jnp.arange(t)[:, None]
+            mask = k_idx <= q_idx  # causal within valid prefix
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            w = jax.nn.softmax(sc, axis=-1)
+            out = jnp.einsum("bhgts,bhsd->bhgtd", w, vh.astype(jnp.float32))
+            out = out.reshape(b, n_heads, t, head_dim).astype(x.dtype)
+    elif kernel_impl == "pallas":
+        from ..kernels.ops import flash_attention
+
+        out = flash_attention(qh, kh, vh, causal=causal)
+    elif kernel_impl == "dense":
+        out = dense_attention(qh, kh, vh, causal=causal)
+    else:
+        # custom-VJP flash path: O(T) residuals (naive autodiff through the
+        # blockwise scan would save the full O(T^2) probability tensors)
+        from .flash_vjp import flash_attention_jax
+
+        out = flash_attention_jax(
+            qh, kh, vh, causal, q_block, kv_block, 0, causal_scheme
+        )
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, n_heads * head_dim)
+    if cache is None and kv_override is None:
+        # expose the projected/rotated KV heads so prefill can build a cache
+        # without re-running the projections (or a dense-score path)
+        new_cache = (kh, vh)
+    return out @ params["o"], new_cache

@@ -1,0 +1,195 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/audio frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (B, frames, d_model) straight into the encoder.
+Positions are absolute sinusoidal (rope_theta=None archs). Decoder layers:
+causal self-attn + cross-attn over encoder output + GELU MLP.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import constrain
+from .attention import KVCache, attention_block, init_qkv
+from .layers import (
+    apply_mlp, apply_norm, embed, init_embedding, init_mlp, init_norm,
+    sinusoidal_positions,
+)
+
+
+class EncDecCache(NamedTuple):
+    k: jax.Array         # (L, B, H, S, D) decoder self-attn cache
+    v: jax.Array
+    cross_k: jax.Array   # (L, B, H, F, D) precomputed from encoder output
+    cross_v: jax.Array
+    length: jax.Array
+
+
+def _init_block(key, cfg, cross: bool) -> dict:
+    ka, kc, km, kn = jax.random.split(key, 4)
+    p = {"self": init_qkv(ka, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.param_dtype)}
+    p["pre_self"] = init_norm(kn, cfg.d_model, cfg.norm_type, cfg.param_dtype)
+    if cross:
+        p["cross"] = init_qkv(kc, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.param_dtype)
+        p["pre_cross"] = init_norm(jax.random.fold_in(kn, 1), cfg.d_model, cfg.norm_type, cfg.param_dtype)
+    p["pre_mlp"] = init_norm(jax.random.fold_in(kn, 2), cfg.d_model, cfg.norm_type, cfg.param_dtype)
+    p.update(init_mlp(km, cfg.d_model, cfg.d_ff, cfg.mlp_type, cfg.param_dtype))
+    return p
+
+
+def init_encdec(cfg, key) -> dict:
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.encoder_layers)
+    dec_keys = jax.random.split(kdec, cfg.num_layers)
+    return {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "encoder": jax.vmap(lambda k: _init_block(k, cfg, cross=False))(enc_keys),
+        "decoder": jax.vmap(lambda k: _init_block(k, cfg, cross=True))(dec_keys),
+        "enc_norm": init_norm(jax.random.fold_in(ke, 1), cfg.d_model, cfg.norm_type, cfg.param_dtype),
+        "final_norm": init_norm(jax.random.fold_in(ke, 2), cfg.d_model, cfg.norm_type, cfg.param_dtype),
+        "lm_head": {
+            "w": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size)) / np.sqrt(cfg.d_model)).astype(cfg.param_dtype)
+        },
+    }
+
+
+def encode(params, frames: jax.Array, cfg) -> jax.Array:
+    """frames: (B, F, d_model) stub embeddings -> encoder hidden states."""
+    b, f, d = frames.shape
+    x = frames + sinusoidal_positions(f, d).astype(frames.dtype)[None]
+    x = constrain(x, ("data", None, None))
+
+    def body(x, lp):
+        h = apply_norm(x, lp.get("pre_self"), cfg.norm_type)
+        out, _ = attention_block(
+            lp["self"], h,
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+            positions=None, rope_theta=None, causal=False,
+            kernel_impl=cfg.kernel_impl,
+            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+        )
+        x = x + out
+        h = apply_norm(x, lp.get("pre_mlp"), cfg.norm_type)
+        x = x + apply_mlp(lp, h, cfg.mlp_type)
+        return constrain(x, ("data", None, None)), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["encoder"], unroll=cfg.scan_unroll)
+    return apply_norm(x, params.get("enc_norm"), cfg.norm_type)
+
+
+def _cross_kv(lp_cross, enc_out, cfg):
+    b, f, _ = enc_out.shape
+    k = (enc_out @ lp_cross["k"]).reshape(b, f, cfg.num_kv_heads, cfg.head_dim)
+    v = (enc_out @ lp_cross["v"]).reshape(b, f, cfg.num_kv_heads, cfg.head_dim)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def decode_stack(params, tokens, enc_out, cfg, cache: EncDecCache | None = None, position_offset=0, collect_kv=False):
+    """Decoder forward. Returns (logits, new_cache_or_kvs)."""
+    b, t = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = position_offset + jnp.arange(t)[None, :]
+    # dynamic sinusoidal embedding (position_offset may be traced at decode)
+    d = cfg.d_model
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-np.log(10000.0) / d))
+    ang = positions[..., None].astype(jnp.float32) * div
+    pos_emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    x = x + pos_emb.astype(x.dtype)
+    x = constrain(x, ("data", None, None))
+
+    if cache is None:
+        def body(x, lp):
+            h = apply_norm(x, lp.get("pre_self"), cfg.norm_type)
+            out, kv = attention_block(
+                lp["self"], h,
+                n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                positions=positions, rope_theta=None, causal=True,
+                kernel_impl=cfg.kernel_impl,
+                q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+            )
+            x = x + out
+            h = apply_norm(x, lp.get("pre_cross"), cfg.norm_type)
+            ck, cv = _cross_kv(lp["cross"], enc_out, cfg)
+            out, _ = attention_block(
+                lp["cross"], h,
+                n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                positions=None, rope_theta=None, causal=False,
+                kv_override=(ck, cv), kernel_impl=cfg.kernel_impl,
+                q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+            )
+            x = x + out
+            h = apply_norm(x, lp.get("pre_mlp"), cfg.norm_type)
+            x = x + apply_mlp(lp, h, cfg.mlp_type)
+            return constrain(x, ("data", None, None)), (kv if collect_kv else None)
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, kvs = jax.lax.scan(fn, x, params["decoder"], unroll=cfg.scan_unroll)
+        new_cache = kvs
+    else:
+        def body(carry, inp):
+            x = carry
+            lp, k_l, v_l, ck_l, cv_l = inp
+            h = apply_norm(x, lp.get("pre_self"), cfg.norm_type)
+            out, kv = attention_block(
+                lp["self"], h,
+                n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                positions=positions, rope_theta=None, causal=True,
+                cache=KVCache(k_l, v_l, cache.length), kernel_impl=cfg.kernel_impl,
+            )
+            x = x + out
+            h = apply_norm(x, lp.get("pre_cross"), cfg.norm_type)
+            out, _ = attention_block(
+                lp["cross"], h,
+                n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                positions=None, rope_theta=None, causal=False,
+                kv_override=(ck_l, cv_l), kernel_impl=cfg.kernel_impl,
+            )
+            x = x + out
+            h = apply_norm(x, lp.get("pre_mlp"), cfg.norm_type)
+            x = x + apply_mlp(lp, h, cfg.mlp_type)
+            return x, (kv.k, kv.v)
+
+        x, (k_n, v_n) = jax.lax.scan(
+            body, x, (params["decoder"], cache.k, cache.v, cache.cross_k, cache.cross_v), unroll=cfg.scan_unroll
+        )
+        new_cache = EncDecCache(k_n, v_n, cache.cross_k, cache.cross_v, cache.length + t)
+
+    x = apply_norm(x, params.get("final_norm"), cfg.norm_type)
+    logits = x @ params["lm_head"]["w"]
+    return constrain(logits, ("data", None, "model")), new_cache
+
+
+def forward(params, tokens, cfg, *, frames=None, cache=None, position_offset=0):
+    """Unified entry. Train/prefill: frames given. Decode: cache given
+    (cross-KV precomputed in the cache)."""
+    if cache is None:
+        enc_out = encode(params, frames, cfg)
+        logits, kvs = decode_stack(params, tokens, enc_out, cfg, position_offset=position_offset)
+        return logits, (kvs, enc_out), jnp.zeros((), jnp.float32)
+    logits, new_cache = decode_stack(
+        params, tokens, None, cfg, cache=cache, position_offset=position_offset
+    )
+    return logits, new_cache, jnp.zeros((), jnp.float32)
+
+
+def init_encdec_cache(params, cfg, batch: int, max_len: int, enc_out=None, dtype=jnp.bfloat16):
+    shape = (cfg.num_layers, batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+    if enc_out is None:
+        f = cfg.encoder_seq
+        ck = jnp.zeros((cfg.num_layers, batch, cfg.num_kv_heads, f, cfg.head_dim), dtype)
+        cv = ck
+    else:
+        def per_layer(lp):
+            return _cross_kv(lp["cross"], enc_out, cfg)
+
+        ck, cv = jax.vmap(per_layer)(params["decoder"])
+        ck, cv = ck.astype(dtype), cv.astype(dtype)
+    return EncDecCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        cross_k=ck, cross_v=cv, length=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,123 @@
+"""Balanced-causal flash attention forward: compute ONLY the lower triangle.
+
+The straightforward causal blockwise scan visits all nq x nk chunk pairs and
+masks the upper triangle — half the score FLOPs are multiply-by-minus-inf.
+This variant pairs q-chunk i with q-chunk (nq-1-i): together they need
+(i+1) + (nq-i) = nq+1 kv-chunk visits — CONSTANT per pair — so the total is
+ceil(nq/2) * (nq+1) ~= nq^2/2 chunk visits with fully static shapes (no cond,
+no dynamic trip counts). Each inner step computes ONE score block for
+whichever of the two q-chunks needs it (a where-select on the small q/row
+state, not on the matmul).
+
+This is the '§Perf causal_scheme=balanced' iteration: same math (validated
+against the dense oracle), ~2x fewer attention-score FLOPs in the compiled
+HLO for causal prefill/train. Forward only — the backward reuses the full
+scheme (its analytic-correction accounting is separate; see dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def balanced_causal_fwd(
+    q: jax.Array,  # (B, Hq, T, D)
+    k: jax.Array,  # (B, Hkv, T, D)
+    v: jax.Array,
+    q_block: int = 512,
+    causal_offset: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (out (B,Hq,T,D), lse (nq,B,Hkv,G,bq)). Requires T == S and
+    T % q_block == 0 (the serving/dry-run shapes satisfy this; the generic
+    path handles ragged cases)."""
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert t == s and t % min(q_block, t) == 0
+    group = hq // hkv
+    scale = 1.0 / np.sqrt(d)
+    bq = min(q_block, t)
+    nq = t // bq
+
+    qb = q.reshape(b, hkv, group, nq, bq, d).astype(jnp.float32) * scale
+    kb = k.reshape(b, hkv, nq, bq, d).astype(jnp.float32)
+    vb = v.reshape(b, hkv, nq, bq, d).astype(jnp.float32)
+    pos = jnp.arange(t).reshape(nq, bq)
+
+    npairs = (nq + 1) // 2
+
+    def pair_step(_, pi):
+        i = pi
+        j = nq - 1 - pi
+        q_i = qb[:, :, :, i]
+        q_j = qb[:, :, :, j]
+        pos_i, pos_j = pos[i], pos[j]
+        j_valid = j != i  # odd nq: middle chunk served once as i
+
+        def kv_step(carry, tstep):
+            (mi, li, acci), (mj, lj, accj) = carry
+            serve_i = tstep <= i
+            kv_idx = jnp.where(serve_i, tstep, tstep - i - 1)
+            q_blk = jnp.where(serve_i, q_i, q_j)
+            qpos = jnp.where(serve_i, pos_i, pos_j)
+
+            sc = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, kb[:, :, kv_idx])
+            cm = (qpos[:, None] + causal_offset) >= pos[kv_idx][None, :]
+            sc = jnp.where(cm[None, None, None], sc, NEG_INF)
+
+            def online(mx, lx, accx):
+                m_cur = jnp.max(sc, axis=-1, keepdims=True)
+                m_new = jnp.maximum(mx, m_cur)
+                p = jnp.exp(sc - m_new)
+                corr = jnp.exp(mx - m_new)
+                l_new = corr * lx + jnp.sum(p, axis=-1, keepdims=True)
+                acc_new = corr * accx + jnp.einsum(
+                    "bhgqk,bhkd->bhgqd", p, vb[:, :, kv_idx]
+                )
+                return m_new, l_new, acc_new
+
+            mi2, li2, acci2 = online(mi, li, acci)
+            mj2, lj2, accj2 = online(mj, lj, accj)
+            upd_j = jnp.logical_and(~serve_i, j_valid)
+            sel = lambda c, a, bb: jnp.where(c, a, bb)  # noqa: E731
+            new_i = (sel(serve_i, mi2, mi), sel(serve_i, li2, li), sel(serve_i, acci2, acci))
+            new_j = (sel(upd_j, mj2, mj), sel(upd_j, lj2, lj), sel(upd_j, accj2, accj))
+            return (new_i, new_j), None
+
+        init = lambda: (  # noqa: E731
+            jnp.full((b, hkv, group, bq, 1), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, group, bq, 1), jnp.float32),
+            jnp.zeros((b, hkv, group, bq, d), jnp.float32),
+        )
+        ((mi, li, acci), (mj, lj, accj)), _ = jax.lax.scan(
+            kv_step, (init(), init()), jnp.arange(nq + 1)
+        )
+        out_i = acci / jnp.maximum(li, 1e-30)
+        out_j = accj / jnp.maximum(lj, 1e-30)
+        lse_i = mi[..., 0] + jnp.log(jnp.maximum(li[..., 0], 1e-30))
+        lse_j = mj[..., 0] + jnp.log(jnp.maximum(lj[..., 0], 1e-30))
+        return None, (out_i, out_j, lse_i, lse_j)
+
+    _, (oi, oj, lse_i, lse_j) = jax.lax.scan(pair_step, None, jnp.arange(npairs))
+    # oi[p] is q-chunk p; oj[p] is q-chunk nq-1-p. Assemble in chunk order.
+    order = np.zeros(nq, np.int32)
+    src_is_j = np.zeros(nq, bool)
+    for p in range(npairs):
+        order[p] = p
+        if nq - 1 - p != p:
+            order[nq - 1 - p] = p
+            src_is_j[nq - 1 - p] = True
+    o_chunks = jnp.where(
+        jnp.asarray(src_is_j)[:, None, None, None, None, None],
+        oj[jnp.asarray(order)],
+        oi[jnp.asarray(order)],
+    )  # (nq, b, hkv, g, bq, d)
+    lse = jnp.where(
+        jnp.asarray(src_is_j)[:, None, None, None, None],
+        lse_j[jnp.asarray(order)],
+        lse_i[jnp.asarray(order)],
+    )
+    out = o_chunks.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, t, d)
+    return out.astype(q.dtype), lse

@@ -1,0 +1,160 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention+MLP block
+applied after every ``attn_every`` SSM layers (weight sharing across depth).
+
+Structure: outer scan over G = num_layers/attn_every groups; inside a group,
+inner scan over the group's SSM layers, then the shared attention block
+(params NOT scanned — broadcast into the body, so sharing is structural and
+SALAAD counts the shared block once, matching the real architecture).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import constrain
+from .attention import KVCache, attention_block, init_qkv
+from .layers import apply_mlp, apply_norm, embed, init_embedding, init_mlp, init_norm
+from .ssm import SSMCache, init_ssm_cache, init_ssm_layer, ssm_block, ssm_dims
+
+
+class HybridCache(NamedTuple):
+    ssm_state: jax.Array   # (L, B, H, P, N)
+    conv: jax.Array        # (L, B, 3, conv_dim)
+    k: jax.Array           # (G, B, Hkv, S, D) shared-attn cache per application
+    v: jax.Array
+    length: jax.Array      # ()
+
+
+def init_hybrid(cfg, key) -> dict:
+    assert cfg.num_layers % cfg.attn_every == 0
+    g = cfg.num_layers // cfg.attn_every
+    ke, kl, ks, kh = jax.random.split(key, 4)
+    layer_keys = jax.random.split(kl, cfg.num_layers).reshape(g, cfg.attn_every, 2)
+
+    def one(k):
+        return init_ssm_layer(
+            k, cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_state, cfg.param_dtype
+        )
+
+    ssm_layers = jax.vmap(jax.vmap(lambda k: one(k)))(layer_keys)  # (G, E, ...)
+    shared = {}
+    shared.update(
+        init_qkv(ks, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.param_dtype)
+    )
+    shared["pre_attn"] = init_norm(jax.random.fold_in(ks, 1), cfg.d_model, cfg.norm_type, cfg.param_dtype)
+    shared["pre_mlp"] = init_norm(jax.random.fold_in(ks, 2), cfg.d_model, cfg.norm_type, cfg.param_dtype)
+    shared.update(init_mlp(jax.random.fold_in(ks, 3), cfg.d_model, cfg.d_ff, cfg.mlp_type, cfg.param_dtype))
+    return {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "ssm_layers": ssm_layers,
+        "shared_attn": shared,
+        "final_norm": init_norm(jax.random.fold_in(ke, 1), cfg.d_model, cfg.norm_type, cfg.param_dtype),
+        "lm_head": {
+            "w": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size)) / np.sqrt(cfg.d_model)).astype(cfg.param_dtype)
+        },
+    }
+
+
+def forward(params, tokens, cfg, *, cache: HybridCache | None = None, position_offset=0):
+    """Returns (logits, new_cache_or_None, aux=0)."""
+    g = cfg.num_layers // cfg.attn_every
+    x = embed(params["embed"], tokens)
+    b, t, _ = x.shape
+    x = constrain(x, ("data", None, None))
+    positions = position_offset + jnp.arange(t)[None, :]
+    shared = params["shared_attn"]
+
+    def group_body(carry, inp):
+        x = carry
+        if cache is None:
+            glp = inp
+
+            def inner(x, lp):
+                h = apply_norm(x, None, "rmsnorm")
+                out, _ = ssm_block(
+                    lp, h, expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+                    d_state=cfg.ssm_state, chunk=cfg.ssm_chunk, cache=None,
+                )
+                return x + out, None
+
+            # nested remat: the group-level checkpoint alone re-materializes
+            # ALL attn_every layers' SSD internals during the group backward
+            # (~30 GB on zamba2 train_4k); per-layer checkpointing inside
+            # bounds it to one layer at a time.
+            fn = jax.checkpoint(inner) if cfg.remat else inner
+            x, _ = jax.lax.scan(fn, x, glp, unroll=cfg.scan_unroll)
+            att_cache = None
+        else:
+            glp, st, cv, k_g, v_g = inp
+
+            def inner(x, lps):
+                lp, st_l, cv_l = lps
+                h = apply_norm(x, None, "rmsnorm")
+                c = SSMCache(st_l, cv_l, cache.length)
+                out, nc = ssm_block(
+                    lp, h, expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+                    d_state=cfg.ssm_state, chunk=cfg.ssm_chunk, cache=c,
+                )
+                return x + out, (nc.state, nc.conv)
+
+            x, (st_new, cv_new) = jax.lax.scan(inner, x, (glp, st, cv), unroll=cfg.scan_unroll)
+            att_cache = KVCache(k_g, v_g, cache.length)
+
+        # shared attention + MLP block
+        h = apply_norm(x, shared.get("pre_attn"), cfg.norm_type)
+        attn_out, kv = attention_block(
+            shared, h,
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+            positions=positions, rope_theta=cfg.rope_theta, causal=True,
+            cache=att_cache, kernel_impl=cfg.kernel_impl,
+            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+            causal_scheme=cfg.causal_scheme,
+        )
+        x = x + attn_out
+        h = apply_norm(x, shared.get("pre_mlp"), cfg.norm_type)
+        x = x + apply_mlp(shared, h, cfg.mlp_type)
+        x = constrain(x, ("data", None, None))
+        if cache is None:
+            return x, None
+        return x, (st_new, cv_new, kv.k, kv.v)
+
+    if cache is None:
+        # remat the FULL group (SSM layers + shared attn/MLP): leaving the
+        # shared block un-rematted keeps ~40 GB of its residuals live across
+        # all 9 applications (measured on zamba2 train_4k)
+        body = jax.checkpoint(group_body) if cfg.remat else group_body
+        x, _ = jax.lax.scan(body, x, params["ssm_layers"], unroll=cfg.scan_unroll)
+        new_cache = None
+    else:
+        st = cache.ssm_state.reshape(g, cfg.attn_every, *cache.ssm_state.shape[1:])
+        cv = cache.conv.reshape(g, cfg.attn_every, *cache.conv.shape[1:])
+        x, (st_n, cv_n, k_n, v_n) = jax.lax.scan(
+            group_body, x, (params["ssm_layers"], st, cv, cache.k, cache.v), unroll=cfg.scan_unroll
+        )
+        new_cache = HybridCache(
+            ssm_state=st_n.reshape(cfg.num_layers, *st_n.shape[2:]),
+            conv=cv_n.reshape(cfg.num_layers, *cv_n.shape[2:]),
+            k=k_n, v=v_n, length=cache.length + t,
+        )
+
+    x = apply_norm(x, params.get("final_norm"), cfg.norm_type)
+    logits = x @ params["lm_head"]["w"]
+    logits = constrain(logits, ("data", None, "model"))
+    return logits, new_cache, jnp.zeros((), jnp.float32)
+
+
+def init_hybrid_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> HybridCache:
+    g = cfg.num_layers // cfg.attn_every
+    d_inner, nheads, conv_dim = ssm_dims(
+        cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_state
+    )
+    return HybridCache(
+        ssm_state=jnp.zeros((cfg.num_layers, batch, nheads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+        conv=jnp.zeros((cfg.num_layers, batch, 3, conv_dim), dtype),
+        k=jnp.zeros((g, batch, cfg.num_kv_heads, max_len, cfg.head_dim), dtype),
+        v=jnp.zeros((g, batch, cfg.num_kv_heads, max_len, cfg.head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

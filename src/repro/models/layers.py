@@ -1,0 +1,141 @@
+"""Shared neural net layers (pure-function style: params are nested dicts).
+
+Conventions:
+  * every linear weight is stored (d_in, d_out) so ``x @ w`` applies it;
+  * scan-stacked layer parameters carry a leading (num_layers,) axis;
+  * compute dtype follows the activation dtype; norms/softmax run in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ----------------------------------------------------------------- norms ---
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def nonparam_layernorm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo-style non-parametric LayerNorm (no scale, no bias)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(x: jax.Array, params: dict | None, norm_type: str) -> jax.Array:
+    if norm_type == "rmsnorm":
+        return rmsnorm(x, params["norm_scale"] if params else None)
+    if norm_type == "nonparam_ln":
+        return nonparam_layernorm(x)
+    if norm_type == "layernorm":
+        x32 = x.astype(jnp.float32)
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * params["norm_scale"].astype(jnp.float32) + params["norm_bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    raise ValueError(norm_type)
+
+
+def init_norm(key, d: int, norm_type: str, dtype) -> dict:
+    if norm_type == "rmsnorm":
+        return {"norm_scale": jnp.zeros((d,), dtype)}
+    if norm_type == "nonparam_ln":
+        return {}
+    if norm_type == "layernorm":
+        return {"norm_scale": jnp.ones((d,), dtype), "norm_bias": jnp.zeros((d,), dtype)}
+    raise ValueError(norm_type)
+
+
+# ------------------------------------------------------------------ RoPE ---
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, d/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., seq, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, offset: int = 0) -> jax.Array:
+    pos = np.arange(offset, offset + seq)[:, None]
+    div = np.exp(np.arange(0, d, 2) * -(np.log(10000.0) / d))
+    pe = np.zeros((seq, d), np.float32)
+    pe[:, 0::2] = np.sin(pos * div)
+    pe[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(pe)
+
+
+# ------------------------------------------------------------------- MLP ---
+
+
+def init_mlp(key, d: int, d_ff: int, mlp_type: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = 1.0 / np.sqrt(d)
+    scale_out = 1.0 / np.sqrt(d_ff)
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "gate": (jax.random.normal(k1, (d, d_ff)) * scale_in).astype(dtype),
+            "up": (jax.random.normal(k2, (d, d_ff)) * scale_in).astype(dtype),
+            "down": (jax.random.normal(k3, (d_ff, d)) * scale_out).astype(dtype),
+        }
+    return {  # plain gelu MLP (whisper)
+        "up": (jax.random.normal(k1, (d, d_ff)) * scale_in).astype(dtype),
+        "up_bias": jnp.zeros((d_ff,), dtype),
+        "down": (jax.random.normal(k2, (d_ff, d)) * scale_out).astype(dtype),
+        "down_bias": jnp.zeros((d,), dtype),
+    }
+
+
+def apply_mlp(params: dict, x: jax.Array, mlp_type: str) -> jax.Array:
+    if mlp_type == "swiglu":
+        return (jax.nn.silu(x @ params["gate"]) * (x @ params["up"])) @ params["down"]
+    if mlp_type == "geglu":
+        return (jax.nn.gelu(x @ params["gate"], approximate=True) * (x @ params["up"])) @ params["down"]
+    if mlp_type == "gelu":
+        h = jax.nn.gelu(x @ params["up"] + params["up_bias"], approximate=True)
+        return h @ params["down"] + params["down_bias"]
+    raise ValueError(mlp_type)
+
+
+# ------------------------------------------------------------- embedding ---
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> dict:
+    return {"embedding": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return params["embedding"][tokens]
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False) -> dict:
+    w = (jax.random.normal(key, (d_in, d_out)) / np.sqrt(d_in)).astype(dtype)
+    out = {"w": w}
+    if bias:
+        out["b"] = jnp.zeros((d_out,), dtype)
+    return out
+
+
+def apply_linear(params: dict, x: jax.Array) -> jax.Array:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y

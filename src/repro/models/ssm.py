@@ -1,0 +1,206 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked train/prefill + O(1) decode.
+
+Chunked SSD (Dao & Gu 2024): the sequence is split into chunks of Q tokens;
+within a chunk the recurrence is expanded into a (Q, Q) lower-triangular
+"attention" form (quadratic in Q only — MXU-friendly), while chunk-to-chunk
+state is carried by a lax.scan — sub-quadratic in sequence length, which is
+what qualifies the ssm/hybrid archs for the long_500k cells.
+
+Decode is the pure recurrent form: state (B, H, P, N) updated per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array     # (B, H, P, N)
+    conv: jax.Array      # (B, K-1, conv_dim) rolling conv window
+    length: jax.Array    # ()
+
+
+def ssm_dims(d_model: int, expand: int, head_dim: int, d_state: int, ngroups: int = 1):
+    d_inner = expand * d_model
+    nheads = d_inner // head_dim
+    conv_dim = d_inner + 2 * ngroups * d_state
+    return d_inner, nheads, conv_dim
+
+
+def init_ssm_layer(key, d_model, expand, head_dim, d_state, dtype, ngroups=1):
+    d_inner, nheads, conv_dim = ssm_dims(d_model, expand, head_dim, d_state, ngroups)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_in_proj = 2 * d_inner + 2 * ngroups * d_state + nheads
+    return {
+        "in_proj": (jax.random.normal(k1, (d_model, d_in_proj)) / np.sqrt(d_model)).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (4, conv_dim)) * 0.2).astype(dtype),
+        "a_log": jnp.zeros((nheads,), jnp.float32),          # A = -exp(a_log) = -1
+        "dt_bias": jnp.full((nheads,), -2.0, jnp.float32),   # softplus ~ 0.12
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+        "out_proj": (jax.random.normal(k3, (d_inner, d_model)) / np.sqrt(d_inner)).astype(dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, window: jax.Array | None = None):
+    """Depthwise causal conv, k=4. x: (B, L, C); w: (4, C).
+
+    ``window`` (B, 3, C): trailing context from a cache (decode); else zeros.
+    Returns (y, new_window)."""
+    b, l, c = x.shape
+    k = w.shape[0]
+    if window is None:
+        window = jnp.zeros((b, k - 1, c), x.dtype)
+    xp = jnp.concatenate([window, x], axis=1)  # (B, L+3, C)
+    y = sum(xp[:, i : i + l] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(y), xp[:, -(k - 1) :]
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise sums: out[..., i, j] = sum_{j<t<=i} dA[..., t].
+
+    dA: (..., q); returns (..., q, q) with -inf above the diagonal."""
+    q = dA.shape[-1]
+    csum = jnp.cumsum(dA, axis=-1)
+    # sum_{j < t <= i} = csum[i] - csum[j]
+    diff = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,    # (B, L, H, P)
+    dt: jax.Array,   # (B, L, H)   (already softplus'd, >0)
+    a: jax.Array,    # (H,)        (negative)
+    b_in: jax.Array, # (B, L, N)   ngroups=1
+    c_in: jax.Array, # (B, L, N)
+    chunk: int = 128,
+    init_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    bsz, l, h, p = x.shape
+    n = b_in.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, f"seq {l} must divide chunk {q}"
+    nc = l // q
+
+    # Mixed precision: the decay/cumsum math stays f32 (exp of sums — small
+    # (B,nc,q,h) tensors), but the LARGE intra-chunk tensors (xc, the (q,q)
+    # decay matrix, the weighted scores) run in the activation dtype. In f32
+    # they alone held ~9 GB/device/layer on zamba2 train_4k (measured:
+    # 93 GB peak); bf16 halves that. Tests feed f32 and keep exactness.
+    f32 = jnp.float32
+    cdt = x.dtype  # compute dtype for the big tensors
+    dtc = dt.reshape(bsz, nc, q, h).astype(f32)
+    dA = dtc * a[None, None, None, :]  # (B, nc, q, h)
+
+    # fold dt into x once: (dt_j x_j) appears in both intra and state terms
+    xdt = (x.reshape(bsz, nc, q, h, p).astype(f32) * dtc[..., None]).astype(cdt)
+    bc = b_in.reshape(bsz, nc, q, n).astype(cdt)
+    cc = c_in.reshape(bsz, nc, q, n).astype(cdt)
+
+    # intra-chunk (quadratic in q): Y_intra = (CB^T * L) (dt x)
+    lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2))).astype(cdt)  # (B,nc,h,q,q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)                 # (B,nc,q,q)
+    w = (scores[:, :, None] * lmat).astype(cdt)                    # (B,nc,h,q,q)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", w, xdt)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    cum = jnp.cumsum(dA, axis=2)                                # (B,nc,q,h)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum).astype(cdt)  # (B,nc,q,h)
+    states = jnp.einsum(
+        "bcqh,bcqn,bcqhp->bchpn", decay_to_end, bc, xdt
+    ).astype(f32)                                               # (B,nc,h,p,n)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))                  # (B,nc,h)
+    s0 = (
+        init_state.astype(f32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), f32)
+    )
+
+    def step(s, inp):
+        st, dec = inp  # (B,h,p,n), (B,h)
+        s_prev = s
+        s_new = s * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    (s_final, s_prevs) = jax.lax.scan(
+        step,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                  # (B,nc,h,p,n)
+
+    # inter-chunk contribution: Y_inter_i = exp(cum_i) * C_i . S_prev
+    in_decay = jnp.exp(cum)                                     # (B,nc,q,h)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc, s_prevs, in_decay)
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y.astype(x.dtype), s_final
+
+
+def ssm_block(
+    params: dict,
+    u: jax.Array,  # (B, L, d_model)
+    *,
+    expand: int,
+    head_dim: int,
+    d_state: int,
+    chunk: int = 128,
+    cache: SSMCache | None = None,
+) -> tuple[jax.Array, SSMCache | None]:
+    """Full Mamba2 block: in_proj -> conv -> SSD -> gated norm -> out_proj."""
+    from .layers import rmsnorm
+
+    bsz, l, d_model = u.shape
+    d_inner, nheads, conv_dim = ssm_dims(d_model, expand, head_dim, d_state)
+    n = d_state
+
+    zxbcdt = u @ params["in_proj"]
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    window = cache.conv if cache is not None else None
+    xbc, new_window = _causal_conv(xbc, params["conv_w"], window)
+    x, b_in, c_in = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    xh = x.reshape(bsz, l, nheads, head_dim)
+
+    if cache is not None and l == 1:
+        # recurrent decode: state' = state * exp(dt A) + dt * x B^T
+        st = cache.state.astype(jnp.float32)  # (B,H,P,N)
+        dt1 = dt[:, 0]                        # (B,H)
+        da = jnp.exp(dt1 * a[None, :])        # (B,H)
+        upd = jnp.einsum(
+            "bh,bhp,bn->bhpn", dt1, xh[:, 0].astype(jnp.float32), b_in[:, 0].astype(jnp.float32)
+        )
+        st_new = st * da[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", st_new, c_in[:, 0].astype(jnp.float32))
+        y = y[:, None]  # (B,1,H,P)
+        new_cache = SSMCache(st_new.astype(cache.state.dtype), new_window, cache.length + 1)
+    else:
+        init_state = cache.state if cache is not None else None
+        y, s_final = ssd_chunked(xh, dt, a, b_in, c_in, chunk=chunk, init_state=init_state)
+        new_cache = (
+            SSMCache(s_final.astype(u.dtype), new_window, (cache.length if cache is not None else 0) + l)
+            if cache is not None
+            else SSMCache(s_final.astype(u.dtype), new_window, jnp.asarray(l, jnp.int32))
+        )
+
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, l, d_inner).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"])
+    return y @ params["out_proj"], new_cache
+
+
+def init_ssm_cache(bsz, d_model, expand, head_dim, d_state, dtype):
+    d_inner, nheads, conv_dim = ssm_dims(d_model, expand, head_dim, d_state)
+    return SSMCache(
+        state=jnp.zeros((bsz, nheads, head_dim, d_state), dtype),
+        conv=jnp.zeros((bsz, 3, conv_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

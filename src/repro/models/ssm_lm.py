@@ -1,0 +1,83 @@
+"""Mamba2 decoder-only LM (attention-free, SSD blocks)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import constrain
+from .layers import apply_norm, embed, init_embedding, init_norm
+from .ssm import SSMCache, init_ssm_layer, ssm_block, ssm_dims
+
+
+class SSMLMCache(NamedTuple):
+    state: jax.Array   # (L, B, H, P, N)
+    conv: jax.Array    # (L, B, 3, conv_dim)
+    length: jax.Array
+
+
+def init_ssm_lm(cfg, key) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(
+        lambda k: init_ssm_layer(
+            k, cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_state, cfg.param_dtype
+        )
+    )(layer_keys)
+    return {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "layers": layers,
+        "final_norm": init_norm(jax.random.fold_in(ke, 1), cfg.d_model, cfg.norm_type, cfg.param_dtype),
+        "lm_head": {
+            "w": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size)) / np.sqrt(cfg.d_model)).astype(cfg.param_dtype)
+        },
+    }
+
+
+def forward(params, tokens, cfg, *, cache: SSMLMCache | None = None, position_offset=0):
+    x = embed(params["embed"], tokens)
+    b, t, _ = x.shape
+    x = constrain(x, ("data", None, None))
+
+    if cache is None:
+        def body(x, lp):
+            h = apply_norm(x, None, "rmsnorm")
+            out, _ = ssm_block(
+                lp, h, expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+                d_state=cfg.ssm_state, chunk=cfg.ssm_chunk, cache=None,
+            )
+            return constrain(x + out, ("data", None, None)), None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(fn, x, params["layers"], unroll=cfg.scan_unroll)
+        new_cache = None
+    else:
+        def body(x, inp):
+            lp, st_l, cv_l = inp
+            h = apply_norm(x, None, "rmsnorm")
+            c = SSMCache(st_l, cv_l, cache.length)
+            out, nc = ssm_block(
+                lp, h, expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+                d_state=cfg.ssm_state, chunk=cfg.ssm_chunk, cache=c,
+            )
+            return x + out, (nc.state, nc.conv)
+
+        x, (st_n, cv_n) = jax.lax.scan(body, x, (params["layers"], cache.state, cache.conv), unroll=cfg.scan_unroll)
+        new_cache = SSMLMCache(st_n, cv_n, cache.length + t)
+
+    x = apply_norm(x, params.get("final_norm"), cfg.norm_type)
+    logits = x @ params["lm_head"]["w"]
+    return constrain(logits, ("data", None, "model")), new_cache, jnp.zeros((), jnp.float32)
+
+
+def init_ssm_lm_cache(cfg, batch: int, dtype=jnp.bfloat16) -> SSMLMCache:
+    d_inner, nheads, conv_dim = ssm_dims(
+        cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_state
+    )
+    return SSMLMCache(
+        state=jnp.zeros((cfg.num_layers, batch, nheads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+        conv=jnp.zeros((cfg.num_layers, batch, 3, conv_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,177 @@
+"""Decoder-only transformer LM (dense / MoE / VLM-backbone) with scan-stacked
+layers, optional remat, KV-cache decode, and sharding constraints.
+
+Layers are stacked along a leading axis and applied with ``jax.lax.scan`` so
+the HLO (and compile time) is depth-independent — mandatory for the 80-layer
+dry-run cells. SALAAD sees the stacked leaves and treats every slice as an
+independent block (core/selection.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import constrain
+from .attention import KVCache, attention_block, init_qkv
+from .layers import apply_mlp, apply_norm, embed, init_embedding, init_mlp, init_norm
+from .moe import init_moe, moe_ffn
+
+
+class LMCache(NamedTuple):
+    k: jax.Array       # (L, B, Hkv, S, D)
+    v: jax.Array
+    length: jax.Array  # ()
+
+
+def init_layer(key, cfg) -> dict:
+    ka, km, kn = jax.random.split(key, 3)
+    p: dict[str, Any] = {}
+    p.update(
+        init_qkv(
+            ka, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+            cfg.param_dtype, bias=cfg.qkv_bias,
+        )
+    )
+    pre = init_norm(kn, cfg.d_model, cfg.norm_type, cfg.param_dtype)
+    p["pre_attn"] = pre
+    p["pre_mlp"] = init_norm(jax.random.fold_in(kn, 1), cfg.d_model, cfg.norm_type, cfg.param_dtype)
+    if cfg.num_experts:
+        p["moe"] = init_moe(km, cfg.d_model, cfg.d_ff, cfg.num_experts, cfg.param_dtype)
+    else:
+        p.update(init_mlp(km, cfg.d_model, cfg.d_ff, cfg.mlp_type, cfg.param_dtype))
+    return p
+
+
+def init_lm(cfg, key) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "layers": layers,
+        "final_norm": init_norm(jax.random.fold_in(ke, 2), cfg.d_model, cfg.norm_type, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size)) / np.sqrt(cfg.d_model)).astype(cfg.param_dtype)
+        }
+    return params
+
+
+def _layer_apply(lp, x, cfg, positions, cache: KVCache | None):
+    """One transformer layer. Returns (x, aux_loss, new_kv)."""
+    h = apply_norm(x, lp.get("pre_attn"), cfg.norm_type)
+    attn_out, kv = attention_block(
+        lp, h,
+        n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        positions=positions, rope_theta=cfg.rope_theta, causal=True,
+        cache=cache, kernel_impl=cfg.kernel_impl,
+        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+        causal_scheme=cfg.causal_scheme,
+    )
+    x = x + attn_out
+    h = apply_norm(x, lp.get("pre_mlp"), cfg.norm_type)
+    if cfg.num_experts:
+        mlp_out, aux = moe_ffn(
+            lp["moe"], h,
+            num_experts=cfg.num_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, num_groups=cfg.moe_groups,
+        )
+    else:
+        mlp_out, aux = apply_mlp(lp, h, cfg.mlp_type), jnp.zeros((), jnp.float32)
+    x = x + mlp_out
+    x = constrain(x, ("data", None, None))
+    return x, aux, kv
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,               # (B, T) int32
+    cfg,
+    *,
+    prefix_embeds: jax.Array | None = None,   # (B, P, d) VLM patch stub
+    cache: LMCache | None = None,
+    position_offset: jax.Array | int = 0,
+    collect_kv: bool = False,
+) -> tuple[jax.Array, Any, jax.Array]:
+    """Returns (logits (B, T', vocab), new_cache_or_kv, aux_loss).
+
+    * train/eval: cache=None. new_cache_or_kv = stacked (k, v) heads per layer
+      (useable to build a prefill cache).
+    * decode: cache given, tokens (B, 1). Returns updated LMCache.
+    """
+    x = embed(params["embed"], tokens)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, t, _ = x.shape
+    x = constrain(x, ("data", None, None))
+    positions = position_offset + jnp.arange(t)[None, :]
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cache is None:
+        def body(carry, lp):
+            x, aux = carry
+            fn = lambda lp_, x_: _layer_apply(lp_, x_, cfg, positions, None)
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            x, a, kv = fn(lp, x)
+            # train path: do NOT emit stacked KV heads (they are dead weight
+            # but scan ys defeat DCE through remat -> ~70 GB/device at 4k)
+            return (x, aux + a), (kv if collect_kv else None)
+
+        (x, aux_total), kvs = jax.lax.scan(body, (x, aux_total), params["layers"], unroll=cfg.scan_unroll)
+        new_cache = kvs  # (kh (L,B,H,T,D), vh (L,B,H,T,D))
+    else:
+        # decode: thread the FULL stacked cache through the carry and update
+        # layer slices in place — consuming cache.k as scan xs and restacking
+        # ys doubles the cache residency (measured ~2x on gemma decode_32k);
+        # the carry form lets XLA alias the donated buffers.
+        def body(carry, inp):
+            x, aux, k_full, v_full = carry
+            lp, l_idx = inp
+            k_l = jax.lax.dynamic_index_in_dim(k_full, l_idx, 0, keepdims=False)
+            v_l = jax.lax.dynamic_index_in_dim(v_full, l_idx, 0, keepdims=False)
+            layer_cache = KVCache(k_l, v_l, cache.length)
+            x, a, kv = _layer_apply(lp, x, cfg, positions, layer_cache)
+            k_full = jax.lax.dynamic_update_index_in_dim(k_full, kv.k, l_idx, 0)
+            v_full = jax.lax.dynamic_update_index_in_dim(v_full, kv.v, l_idx, 0)
+            return (x, aux + a, k_full, v_full), None
+
+        (x, aux_total, k_new, v_new), _ = jax.lax.scan(
+            body,
+            (x, aux_total, cache.k, cache.v),
+            (params["layers"], jnp.arange(cfg.num_layers)),
+            unroll=cfg.scan_unroll,
+        )
+        new_cache = LMCache(k_new, v_new, cache.length + t)
+
+    x = apply_norm(x, params.get("final_norm"), cfg.norm_type)
+    head = params["lm_head"]["w"] if "lm_head" in params else params["embed"]["embedding"].T
+    logits = x @ head
+    logits = constrain(logits, ("data", None, "model"))
+    return logits, new_cache, aux_total
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> LMCache:
+    shape = (cfg.num_layers, batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+    return LMCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_from_prefill(cfg, kvs, max_len: int, dtype=jnp.bfloat16) -> LMCache:
+    """Build an LMCache from forward()'s stacked prefill (k, v) heads."""
+    kh, vh = kvs  # (L, B, H, T, D)
+    l, b, h, t, d = kh.shape
+    # VLM prefill sequences include the patch prefix and may exceed the
+    # nominal text max_len — grow the cache rather than truncate
+    pad = max(max_len - t, 0)
+    k = jnp.pad(kh.astype(dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    v = jnp.pad(vh.astype(dtype), ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    return LMCache(k=k, v=v, length=jnp.asarray(t, jnp.int32))

@@ -1,0 +1,74 @@
+"""Adam optimizer (paper's base optimizer, zero weight decay by default).
+
+Custom implementation (no optax in the container): moments are stored in f32
+regardless of param dtype (mixed-precision training at scale), and the tree
+layout is plain dicts so moment leaves inherit the weight's NamedSharding
+(ZeRO-style sharded optimizer state for free under GSPMD).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0   # paper §5.1: zero weight decay
+    grad_clip: float = 1.0      # global-norm clip; 0 disables
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def init_adam(params: Any) -> AdamState:
+    f32zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return AdamState(
+        mu=jax.tree.map(f32zeros, params),
+        nu=jax.tree.map(f32zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adam_update(
+    grads: Any, state: AdamState, params: Any, cfg: AdamConfig, lr_scale: jax.Array | float = 1.0
+) -> tuple[Any, AdamState]:
+    """Returns (new_params, new_state)."""
+    if cfg.grad_clip:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    count = state.count + 1
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        step = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - cfg.lr * lr_scale * step
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamState(new_mu, new_nu, count)

@@ -1,0 +1,17 @@
+"""Learning-rate schedules (warmup + cosine, the LLaMA/GaLore standard)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10000, floor: float = 0.1):
+    """Multiplicative LR scale in [floor, 1]."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos
+
+
+def constant(step, **_):
+    return jnp.ones_like(jnp.asarray(step, jnp.float32))

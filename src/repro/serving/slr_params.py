@@ -1,0 +1,156 @@
+"""Deployment-time SLR parameters: the paper's point is that L + S is what
+ships. Three deployment formats, increasing TPU-specialization:
+
+  * ``dense``    — materialize X_hat = L + S (baseline; no memory savings,
+                   used for perplexity parity checks)
+  * ``factored`` — keep (p, vt) + COO S; linears run as x@p@vt + sparse part
+                   via dense scatter per call (XLA path, shards under GSPMD)
+  * ``bsr``      — factored L + 128x128 block-CSR S for the Pallas kernels
+                   (single-core TPU hot path; DESIGN.md §3 hardware adaptation)
+
+``deployment_report`` accounts bytes for each format — the numbers behind
+EXPERIMENTS.md's memory-reduction table (paper Table 1 PRM columns).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import sparse
+from ..core.admm import SLRState, surrogate_params
+from ..core.selection import BlockInfo
+from ..kernels.bsr_matmul import BsrMatrix, bsr_from_dense
+
+
+@dataclass
+class SLRLinear:
+    """One deployed SLR weight."""
+
+    p: jax.Array | None          # (n, r_live)
+    vt: jax.Array | None         # (r_live, m)
+    s_coo: sparse.CooMatrix | None
+    s_bsr: BsrMatrix | None
+    shape: tuple[int, int]
+
+    def apply(self, x: jax.Array, kernel: bool = False) -> jax.Array:
+        """y = x @ (L + S)."""
+        y = 0.0
+        if self.p is not None:
+            if kernel:
+                from ..kernels.ops import lowrank_matmul
+
+                flat = x.reshape(-1, x.shape[-1])
+                y = lowrank_matmul(flat, self.p, self.vt).reshape(*x.shape[:-1], -1)
+            else:
+                y = (x @ self.p) @ self.vt
+        if self.s_bsr is not None and kernel:
+            from ..kernels.ops import bsr_matmul
+
+            flat = x.reshape(-1, x.shape[-1])
+            y = y + bsr_matmul(flat, self.s_bsr).reshape(*x.shape[:-1], self.shape[1])
+        elif self.s_coo is not None:
+            s_dense = sparse.to_dense(self.s_coo).astype(x.dtype)
+            y = y + x @ s_dense
+        return y
+
+    @property
+    def param_bytes(self) -> int:
+        total = 0
+        if self.p is not None:
+            total += self.p.size * self.p.dtype.itemsize
+            total += self.vt.size * self.vt.dtype.itemsize
+        if self.s_bsr is not None:
+            total += self.s_bsr.vals.size * self.s_bsr.vals.dtype.itemsize
+            total += self.s_bsr.rows.size * 4 + self.s_bsr.counts.size * 4
+        elif self.s_coo is not None:
+            nnz = int(np.sum(np.asarray(self.s_coo.idx) >= 0))
+            total += nnz * (self.s_coo.values.dtype.itemsize + 4)
+        return total
+
+
+def _live_rank_slice(blk, info: BlockInfo):
+    """Trim factored L to live singular values (per slice; stacked blocks keep
+    the max live rank across slices so shapes stay static)."""
+    s_vals = np.asarray(blk.s_vals)
+    live = s_vals > 0
+    r_live = int(live.sum(axis=-1).max()) if live.size else 0
+    if r_live == 0:
+        return None, None
+    order = np.argsort(-s_vals, axis=-1)[..., :r_live]
+    p = np.take_along_axis(np.asarray(blk.p), order[..., None, :], axis=-1)
+    vt = np.take_along_axis(np.asarray(blk.vt), order[..., :, None], axis=-2)
+    return jnp.asarray(p), jnp.asarray(vt)
+
+
+def build_slr_linears(
+    state: SLRState,
+    blocks: list[BlockInfo],
+    fmt: str = "factored",
+    bsr_block: int = 128,
+) -> dict[str, Any]:
+    """Per-block deployed representation. Stacked blocks are kept stacked for
+    'factored'; 'bsr' unstacks (the Pallas kernel is per-matrix)."""
+    out = {}
+    for info in blocks:
+        blk = state[info.name]
+        p, vt = _live_rank_slice(blk, info)
+        if fmt == "bsr" and not info.stack_dims:
+            dense_s = np.asarray(sparse.to_dense(blk.s_coo), np.float32)
+            n, m = dense_s.shape
+            bs = bsr_block
+            while (n % bs or m % bs) and bs > 8:
+                bs //= 2
+            s_bsr = bsr_from_dense(dense_s, bs) if n % bs == 0 and m % bs == 0 else None
+            # keep the COO view too: apply(kernel=False) is the XLA/GSPMD
+            # fallback and must include the sparse part
+            out[info.name] = SLRLinear(
+                p=p, vt=vt, s_coo=blk.s_coo, s_bsr=s_bsr, shape=(info.n, info.m)
+            )
+        else:
+            out[info.name] = SLRLinear(
+                p=p, vt=vt, s_coo=blk.s_coo, s_bsr=None, shape=(info.n, info.m)
+            )
+    return out
+
+
+def deploy_params(params: Any, state: SLRState, blocks: list[BlockInfo], fmt: str = "dense"):
+    """For fmt='dense': params with X replaced by X_hat = L + S (architecture-
+    preserving — the model code runs unchanged, paper §4.3)."""
+    assert fmt == "dense"
+    return surrogate_params(params, state, blocks)
+
+
+def deployment_report(params: Any, state: SLRState, blocks: list[BlockInfo]) -> dict:
+    """Bytes by format vs the dense original (per block + totals)."""
+    report: dict[str, Any] = {"blocks": {}}
+    dense_total = 0
+    slr_total = 0
+    for info in blocks:
+        blk = state[info.name]
+        dense_b = int(np.prod(info.shape)) * 2  # bf16 deploy baseline
+        nnz = int(np.sum(np.asarray(blk.s_coo.idx) >= 0))
+        live = int(np.sum(np.asarray(blk.s_vals) > 0))
+        slr_b = live * (info.n + info.m) * 2 + nnz * (2 + 4)
+        report["blocks"][info.name] = {
+            "dense_bytes": dense_b, "slr_bytes": slr_b,
+            "rank_live": live, "nnz": nnz,
+        }
+        dense_total += dense_b
+        slr_total += slr_b
+    unselected = 0
+    sel = {info.name for info in blocks}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        from ..core.selection import path_str
+
+        if path_str(path) not in sel:
+            unselected += int(np.prod(leaf.shape)) * 2
+    report["dense_total_bytes"] = dense_total + unselected
+    report["slr_total_bytes"] = slr_total + unselected
+    report["compression"] = (
+        (dense_total + unselected) / max(slr_total + unselected, 1)
+    )
+    return report

@@ -1,0 +1,47 @@
+"""TrainState: everything a training step touches, as one pytree.
+
+SALAAD surrogate state rides along (``slr``); the stage-1 step only *reads*
+it (the penalty target Z is derived in-graph from the compact (p, vt, coo, y)
+storage), the stage-2 ``admm_step`` replaces it every K steps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.admm import SalaadConfig, SLRState, init_slr_state
+from ..core.selection import BlockInfo
+from ..optim.adam import AdamConfig, AdamState, init_adam
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamState
+    slr: SLRState           # {} when SALAAD is disabled (vanilla baseline)
+    step: jax.Array
+
+
+def init_train_state(
+    params: Any, salaad_cfg: SalaadConfig | None
+) -> tuple[TrainState, list[BlockInfo]]:
+    if salaad_cfg is None:
+        slr, blocks = {}, []
+    else:
+        slr, blocks = init_slr_state(params, salaad_cfg)
+    return (
+        TrainState(params=params, opt=init_adam(params), slr=slr, step=jnp.zeros((), jnp.int32)),
+        blocks,
+    )
+
+
+def abstract_train_state(params_abstract: Any, salaad_cfg: SalaadConfig | None) -> TrainState:
+    """ShapeDtypeStruct TrainState for the dry-run (no allocation)."""
+
+    def mk(p):
+        state, _ = init_train_state(p, salaad_cfg)
+        return state
+
+    return jax.eval_shape(mk, params_abstract)

@@ -1,0 +1,97 @@
+"""Jit-able step functions: stage-1 train step (coupled loss), stage-2 ADMM
+step, and serving steps. Shared by the trainer, the dry-run, and benchmarks —
+what gets lowered for the roofline IS what the trainer runs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.admm import SalaadConfig, admm_update, penalty
+from ..core.selection import BlockInfo
+from ..models import model
+from ..optim.adam import AdamConfig, adam_update
+from ..optim.schedule import warmup_cosine
+from .state import TrainState
+
+
+def make_train_step(
+    arch_cfg,
+    blocks: list[BlockInfo],
+    adam_cfg: AdamConfig = AdamConfig(),
+    schedule: Callable = warmup_cosine,
+    accum_steps: int = 1,
+    aux_weight: float = 0.01,
+    pre_split: bool = False,
+):
+    """Stage-1 guided learning step: l_c = task + SALAAD penalty, Adam update.
+
+    ``accum_steps > 1`` splits the batch into microbatches and accumulates
+    grads with lax.scan — trades peak activation memory for sequential steps
+    and lets XLA overlap the per-microbatch reduce-scatter with compute.
+    ``pre_split``: the batch already carries a leading (accum_steps,) axis
+    (the SPMD launcher pre-splits on the host — reshaping a data-sharded
+    batch inside the program trips an XLA SPMD verifier bug, observed on
+    dbrx train_4k with accum=4).
+    """
+
+    def loss_fn(params, slr, batch):
+        task, metrics = model.loss_fn(params, batch, arch_cfg, aux_weight=aux_weight)
+        pen = penalty(params, slr, blocks) if blocks else jnp.zeros((), jnp.float32)
+        return task + pen, {**metrics, "penalty": pen, "task_loss": task}
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(state.params, state.slr, batch)
+        else:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = grad_fn(state.params, state.slr, mb)
+                return (jax.tree.map(jnp.add, gacc, g), lacc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            mbs = batch if pre_split else jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:]),
+                batch,
+            )
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            metrics = {}
+        lr_scale = schedule(state.step)
+        new_params, new_opt = adam_update(grads, state.opt, state.params, adam_cfg, lr_scale)
+        new_state = TrainState(
+            params=new_params, opt=new_opt, slr=state.slr, step=state.step + 1
+        )
+        return new_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_admm_step(salaad_cfg: SalaadConfig, blocks: list[BlockInfo]):
+    """Stage-2: proximal sweep + I-controller over every block."""
+
+    def admm_step(state: TrainState) -> tuple[TrainState, dict]:
+        new_slr, stats = admm_update(state.params, state.slr, blocks, salaad_cfg, state.step)
+        return state._replace(slr=new_slr), stats
+
+    return admm_step
+
+
+def make_prefill_step(arch_cfg, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, arch_cfg, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(arch_cfg):
+    def decode_step(params, token, cache):
+        return model.decode_step(params, token, cache, arch_cfg)
+
+    return decode_step

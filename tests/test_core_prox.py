@@ -1,0 +1,123 @@
+"""Unit + property tests for proximal operators and structural statistics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.prox import (
+    density,
+    effective_rank_ratio,
+    effective_rank_ratio_from_singular_values,
+    soft_threshold,
+    svt,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+class TestSoftThreshold:
+    def test_zero_tau_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (17, 9))
+        np.testing.assert_allclose(soft_threshold(x, 0.0), x)
+
+    def test_known_values(self):
+        x = jnp.array([-2.0, -0.5, 0.0, 0.5, 2.0])
+        np.testing.assert_allclose(
+            soft_threshold(x, 1.0), jnp.array([-1.0, 0.0, 0.0, 0.0, 1.0])
+        )
+
+    @given(st.floats(0.0, 5.0), st.integers(0, 1000))
+    @settings(max_examples=25, deadline=None)
+    def test_prox_property(self, tau, seed):
+        """soft_threshold(z, tau) minimizes tau|s|_1 + 1/2 (s-z)^2 element-wise:
+        check optimality vs random perturbations (prox property)."""
+        z = jax.random.normal(jax.random.PRNGKey(seed), (32,))
+        s = soft_threshold(z, tau)
+        obj = lambda v: tau * jnp.sum(jnp.abs(v)) + 0.5 * jnp.sum((v - z) ** 2)
+        base = obj(s)
+        for pseed in range(3):
+            pert = 0.1 * jax.random.normal(jax.random.PRNGKey(1000 + pseed), (32,))
+            assert obj(s + pert) >= base - 1e-5
+
+    def test_shrinkage_never_crosses_zero(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (100,))
+        s = soft_threshold(x, 0.3)
+        assert jnp.all(s * x >= 0)
+        assert jnp.all(jnp.abs(s) <= jnp.abs(x))
+
+
+class TestSVT:
+    def test_zero_tau_reconstructs(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (24, 16))
+        _, l = svt(x, 0.0)
+        np.testing.assert_allclose(l, x, atol=1e-4)
+
+    def test_large_tau_zeroes(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (24, 16))
+        s_thr, l = svt(x, 1e6)
+        assert jnp.all(s_thr == 0)
+        np.testing.assert_allclose(l, jnp.zeros_like(x), atol=1e-6)
+
+    def test_rank_reduction(self):
+        key = jax.random.PRNGKey(1)
+        u = jax.random.normal(key, (40, 3))
+        v = jax.random.normal(jax.random.fold_in(key, 1), (3, 30))
+        x = u @ v + 0.01 * jax.random.normal(jax.random.fold_in(key, 2), (40, 30))
+        s_full = jnp.linalg.svd(x, compute_uv=False)
+        tau = float(s_full[3]) * 1.5  # kill the noise floor
+        s_thr, l = svt(x, tau)
+        assert int(jnp.sum(s_thr > 0)) == 3
+
+    def test_singular_values_match_matrix(self):
+        x = jax.random.normal(jax.random.PRNGKey(7), (20, 20))
+        s_thr, l = svt(x, 0.5)
+        s_of_l = jnp.linalg.svd(l, compute_uv=False)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(s_of_l))[::-1], np.sort(np.asarray(s_thr))[::-1], atol=1e-4
+        )
+
+
+class TestEffectiveRank:
+    def test_identity_full_rank(self):
+        # identity: all singular values equal -> need ceil(gamma*n) of them
+        r = effective_rank_ratio(jnp.eye(10), gamma=0.999)
+        assert float(r) == 1.0
+
+    def test_rank_one(self):
+        x = jnp.outer(jnp.ones(10), jnp.ones(8))
+        r = effective_rank_ratio(x, gamma=0.999)
+        assert float(r) == pytest.approx(1 / 8)
+
+    def test_zero_matrix(self):
+        assert float(effective_rank_ratio(jnp.zeros((5, 5)))) == 0.0
+
+    def test_denom_override(self):
+        s = jnp.array([10.0, 0.0, 0.0])
+        r = effective_rank_ratio_from_singular_values(s, denom=100)
+        assert float(r) == pytest.approx(0.01)
+
+    @given(st.integers(1, 12), st.integers(0, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_monotone_in_rank(self, rank, seed):
+        """A matrix built from `rank` strong directions has eff-rank >= rank
+        coverage at gamma<=(rank/(rank+eps)) and exactly counts them when the
+        spectrum is flat."""
+        s = jnp.concatenate([jnp.ones(rank), jnp.zeros(16 - rank)])
+        r = effective_rank_ratio_from_singular_values(s, gamma=0.999)
+        assert float(r) == pytest.approx(rank / 16)
+
+    def test_batched(self):
+        s = jnp.stack([jnp.array([1.0, 1.0, 0.0, 0.0]), jnp.array([1.0, 0.0, 0.0, 0.0])])
+        r = effective_rank_ratio_from_singular_values(s)
+        np.testing.assert_allclose(r, [0.5, 0.25])
+
+
+class TestDensity:
+    def test_half(self):
+        x = jnp.array([[1.0, 0.0], [0.0, 2.0]])
+        assert float(density(x)) == 0.5
+
+    def test_zero(self):
+        assert float(density(jnp.zeros((4, 4)))) == 0.0

@@ -1,0 +1,203 @@
+"""Multi-device SPMD tests, run in subprocesses with forced host devices
+(XLA_FLAGS must be set before jax init, and the main test process must keep
+seeing 1 device — hence subprocess isolation).
+
+Covers: sharded train step == single-device train step, elastic checkpoint
+restore across device counts (8 -> 4), and MoE expert-parallel equivalence.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int, timeout=600) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-3000:]}"
+    line = [l for l in out.stdout.strip().splitlines() if l.startswith("{")][-1]
+    return json.loads(line)
+
+
+COMMON = textwrap.dedent(
+    """
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.base import get_arch
+    from repro.core.admm import SalaadConfig
+    from repro.core.selection import SelectionConfig, select_blocks
+    from repro.data.synthetic import SyntheticC4, DataConfig
+    from repro.models import model as model_lib
+    from repro.optim.adam import AdamConfig
+    from repro.parallel.sharding import param_sharding_tree
+    from repro.train.state import init_train_state
+    from repro.train.steps import make_train_step
+
+    def build(arch="olmo_1b", salaad=True):
+        cfg = get_arch(arch).reduced()
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        scfg = SalaadConfig(selection=SelectionConfig(min_dim=16), rho_constant=5.0,
+                            update_every=2, exact_svd=True) if salaad else None
+        state, blocks = init_train_state(params, scfg)
+        step = make_train_step(cfg, blocks, AdamConfig())
+        data = SyntheticC4(DataConfig(cfg.vocab_size, 16, 8))
+        return cfg, state, step, data, blocks
+    """
+)
+
+
+class TestShardedTraining:
+    def test_sharded_matches_single_device(self):
+        """3 train steps on a 4x2 mesh == 3 steps on 1 device (same math)."""
+        prog = COMMON + textwrap.dedent(
+            """
+            cfg, state, step, data, blocks = build()
+            mesh = jax.make_mesh((4, 2), ("data", "model"))
+            pshard = param_sharding_tree(state.params, mesh)
+            with mesh:
+                jstep = jax.jit(step)
+                for s in range(3):
+                    state, metrics = jstep(state, data.batch(s))
+            print(json.dumps({
+                "loss": float(metrics["loss"]),
+                "w0": float(jnp.sum(state.params["embed"]["embedding"].astype(jnp.float32))),
+            }))
+            """
+        )
+        multi = run_py(prog, devices=8)
+        single = run_py(prog.replace('jax.make_mesh((4, 2), ("data", "model"))',
+                                     'jax.make_mesh((1, 1), ("data", "model"))'),
+                        devices=8)
+        assert abs(multi["loss"] - single["loss"]) < 2e-3
+        assert abs(multi["w0"] - single["w0"]) / (abs(single["w0"]) + 1e-9) < 1e-3
+
+    def test_explicit_shardings_train(self):
+        """Train with explicit in_shardings (the dry-run configuration) and
+        verify loss decreases and stays finite."""
+        prog = COMMON + textwrap.dedent(
+            """
+            from repro.launch.dryrun import batch_shardings, slr_shardings
+            cfg, state, step, data, blocks = build()
+            mesh = jax.make_mesh((4, 2), ("data", "model"))
+            pshard = param_sharding_tree(state.params, mesh)
+            state = jax.device_put(state, state._replace(
+                params=pshard,
+                opt=state.opt._replace(mu=pshard, nu=pshard,
+                                       count=NamedSharding(mesh, P())),
+                slr=slr_shardings(state.slr, pshard, mesh),
+                step=NamedSharding(mesh, P()),
+            ))
+            losses = []
+            with mesh:
+                jstep = jax.jit(step, donate_argnums=(0,))
+                for s in range(8):
+                    state, metrics = jstep(state, data.batch(s))
+                    losses.append(float(metrics["loss"]))
+            print(json.dumps({"first": losses[0], "last": losses[-1]}))
+            """
+        )
+        out = run_py(prog, devices=8)
+        # warmup keeps lr tiny for the first 100 steps and each step sees a
+        # fresh batch, so require stability (finite, no divergence) — strict
+        # decrease past warmup is covered by the trainer tests
+        import math
+
+        assert math.isfinite(out["last"])
+        assert out["last"] < out["first"] + 1.0
+
+    def test_moe_expert_parallel_equivalence(self):
+        """MoE forward on a model-sharded mesh == single device (dropless)."""
+        prog = COMMON + textwrap.dedent(
+            """
+            cfg, state, step, data, blocks = build("dbrx_132b", salaad=False)
+            batch = data.batch(0)
+            batch = {k: v[:4] for k, v in batch.items()}
+            loss_single, _ = model_lib.loss_fn(state.params, batch, cfg)
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            with mesh:
+                loss_sharded, _ = jax.jit(
+                    lambda p, b: model_lib.loss_fn(p, b, cfg)
+                )(state.params, batch)
+            print(json.dumps({"single": float(loss_single), "sharded": float(loss_sharded)}))
+            """
+        )
+        out = run_py(prog, devices=8)
+        # capacity semantics differ slightly (per-shard vs global), so allow
+        # a small tolerance; gross divergence would mean broken EP routing
+        assert abs(out["single"] - out["sharded"]) < 0.05 * abs(out["single"])
+
+
+class TestElasticRestore:
+    def test_reshard_8_to_4(self):
+        """Save on an (4,2) mesh, restore and continue on (2,2): elastic."""
+        import tempfile
+
+        ckpt = tempfile.mkdtemp()
+        save_prog = COMMON + textwrap.dedent(
+            f"""
+            from repro.train import checkpoint
+            cfg, state, step, data, blocks = build()
+            mesh = jax.make_mesh((4, 2), ("data", "model"))
+            with mesh:
+                jstep = jax.jit(step)
+                for s in range(2):
+                    state, m = jstep(state, data.batch(s))
+            checkpoint.save({ckpt!r}, 2, state)
+            print(json.dumps({{"loss": float(m["loss"])}}))
+            """
+        )
+        run_py(save_prog, devices=8)
+
+        restore_prog = COMMON + textwrap.dedent(
+            f"""
+            from repro.train import checkpoint
+            from repro.launch.dryrun import slr_shardings
+            cfg, state, step, data, blocks = build()
+            mesh = jax.make_mesh((2, 2), ("data", "model"))
+            pshard = param_sharding_tree(state.params, mesh)
+            shardings = state._replace(
+                params=pshard,
+                opt=state.opt._replace(mu=pshard, nu=pshard,
+                                       count=NamedSharding(mesh, P())),
+                slr=slr_shardings(state.slr, pshard, mesh),
+                step=NamedSharding(mesh, P()),
+            )
+            state = checkpoint.restore({ckpt!r}, state, shardings=shardings)
+            assert int(state.step) == 2
+            with mesh:
+                jstep = jax.jit(step)
+                state, m = jstep(state, data.batch(2))
+            print(json.dumps({{"loss": float(m["loss"]), "step": int(state.step)}}))
+            """
+        )
+        out = run_py(restore_prog, devices=4)
+        assert out["step"] == 3
+        assert out["loss"] < 10.0  # finite, sane
+
+
+class TestMultiPodMesh:
+    def test_pod_axis_folds_into_data(self):
+        """Batch sharded over (pod, data): one forward on the 3-axis mesh."""
+        prog = COMMON + textwrap.dedent(
+            """
+            cfg, state, step, data, blocks = build(salaad=False)
+            mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+            with mesh:
+                jstep = jax.jit(step)
+                state, m = jstep(state, data.batch(0))
+            print(json.dumps({"loss": float(m["loss"])}))
+            """
+        )
+        out = run_py(prog, devices=8)
+        assert out["loss"] < 10.0

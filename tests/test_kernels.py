@@ -1,0 +1,140 @@
+"""Per-kernel shape/dtype sweeps, assert_allclose against ref.py oracles.
+
+Every Pallas kernel runs in interpret=True (Python-on-CPU execution of the
+kernel body) against the pure-jnp oracle.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.bsr_matmul import bsr_from_dense, bsr_to_dense
+
+I = dict(interpret=True)
+
+
+def rnd(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: dict(atol=2e-3, rtol=2e-3), jnp.bfloat16: dict(atol=1e-1, rtol=1e-1)}
+
+
+class TestSoftThresholdKernel:
+    @pytest.mark.parametrize("shape", [(128, 128), (300, 170), (64, 513), (1, 7)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("tau", [0.0, 0.3, 5.0])
+    def test_sweep(self, shape, dtype, tau):
+        x = rnd(0, shape, dtype)
+        got = ops.soft_threshold(x, tau, **I)
+        want = ref.soft_threshold_ref(x, tau)
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), want.astype(jnp.float32), **TOL[dtype]
+        )
+
+
+class TestLowrankMatmulKernel:
+    @pytest.mark.parametrize(
+        "t,k,r,m", [(128, 128, 16, 128), (200, 320, 24, 260), (64, 512, 8, 96), (13, 40, 4, 17)]
+    )
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, t, k, r, m, dtype):
+        x, p, vt = rnd(0, (t, k), dtype), rnd(1, (k, r), dtype), rnd(2, (r, m), dtype)
+        got = ops.lowrank_matmul(x, p, vt, bm=64, bk=128, bn=128, **I)
+        want = ref.lowrank_matmul_ref(x, p, vt)
+        scale = max(float(jnp.abs(want.astype(jnp.float32)).max()), 1.0)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32) / scale,
+            np.asarray(want, np.float32) / scale,
+            **TOL[dtype],
+        )
+
+    def test_zero_rank_edge(self):
+        x, p, vt = rnd(0, (32, 64), jnp.float32), jnp.zeros((64, 8)), jnp.zeros((8, 32))
+        got = ops.lowrank_matmul(x, p, vt, **I)
+        np.testing.assert_array_equal(got, jnp.zeros((32, 32)))
+
+
+class TestBsrMatmulKernel:
+    @pytest.mark.parametrize("bs", [32, 64, 128])
+    @pytest.mark.parametrize("occupancy", [0.0, 0.1, 0.5, 1.0])
+    def test_occupancy_sweep(self, bs, occupancy):
+        key = jax.random.PRNGKey(0)
+        n, m = 4 * bs, 3 * bs
+        mask = jax.random.uniform(key, (n // bs, m // bs)) < occupancy
+        dense = rnd(1, (n, m), jnp.float32) * jnp.repeat(jnp.repeat(mask, bs, 0), bs, 1)
+        bsr = bsr_from_dense(np.asarray(dense), bs)
+        assert bsr.occupancy == pytest.approx(float(mask.mean()), abs=1e-6)
+        np.testing.assert_allclose(bsr_to_dense(bsr), dense, atol=1e-6)
+        x = rnd(2, (100, n), jnp.float32)
+        got = ops.bsr_matmul(x, bsr, bt=64, **I)
+        want = ref.bsr_matmul_ref(x, bsr)
+        np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+    def test_bf16(self):
+        bs = 32
+        n, m = 2 * bs, 2 * bs
+        dense = rnd(1, (n, m), jnp.bfloat16)
+        bsr = bsr_from_dense(np.asarray(dense.astype(jnp.float32)).astype(np.float32), bs)
+        x = rnd(2, (64, n), jnp.float32)
+        got = ops.bsr_matmul(x, bsr, **I)
+        want = ref.bsr_matmul_ref(x, bsr)
+        np.testing.assert_allclose(got, want, atol=1e-1, rtol=1e-1)
+
+    def test_ragged_rows(self):
+        """Non-uniform blocks per column exercise the scalar-prefetch path."""
+        bs = 32
+        dense = np.zeros((4 * bs, 4 * bs), np.float32)
+        rng = np.random.RandomState(0)
+        dense[0 * bs : 1 * bs, 0 * bs : 1 * bs] = rng.randn(bs, bs)
+        dense[2 * bs : 3 * bs, 0 * bs : 1 * bs] = rng.randn(bs, bs)
+        dense[3 * bs : 4 * bs, 0 * bs : 1 * bs] = rng.randn(bs, bs)
+        dense[1 * bs : 2 * bs, 3 * bs : 4 * bs] = rng.randn(bs, bs)
+        bsr = bsr_from_dense(dense, bs)
+        assert np.asarray(bsr.counts).tolist() == [3, 0, 0, 1]
+        x = rnd(3, (48, 4 * bs), jnp.float32)
+        got = ops.bsr_matmul(x, bsr, bt=48, **I)
+        np.testing.assert_allclose(got, x @ dense, atol=2e-3, rtol=2e-3)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize(
+        "b,hq,hkv,t,s,d",
+        [
+            (1, 2, 2, 128, 128, 64),   # MHA
+            (2, 4, 2, 128, 128, 32),   # GQA group 2
+            (1, 8, 1, 64, 64, 32),     # MQA
+            (1, 2, 2, 256, 256, 64),   # longer
+        ],
+    )
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_sweep(self, b, hq, hkv, t, s, d, causal):
+        q = rnd(0, (b, hq, t, d), jnp.float32) * 0.5
+        k = rnd(1, (b, hkv, s, d), jnp.float32) * 0.5
+        v = rnd(2, (b, hkv, s, d), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=causal, bq=64, bk=64, **I)
+        want = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+    def test_bf16(self):
+        q = rnd(0, (1, 2, 128, 32), jnp.bfloat16) * 0.5
+        k = rnd(1, (1, 2, 128, 32), jnp.bfloat16) * 0.5
+        v = rnd(2, (1, 2, 128, 32), jnp.bfloat16)
+        got = ops.flash_attention(q, k, v, causal=True, bq=64, bk=64, **I)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), atol=5e-2, rtol=5e-2
+        )
+
+    def test_block_size_invariance(self):
+        """Result must not depend on the tiling."""
+        q = rnd(0, (1, 2, 256, 32), jnp.float32) * 0.3
+        k = rnd(1, (1, 2, 256, 32), jnp.float32) * 0.3
+        v = rnd(2, (1, 2, 256, 32), jnp.float32)
+        a = ops.flash_attention(q, k, v, bq=256, bk=256, **I)
+        b = ops.flash_attention(q, k, v, bq=64, bk=128, **I)
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)

@@ -1,0 +1,160 @@
+"""Model-internals tests: flash custom VJP, balanced-causal scheme, chunked
+SSD vs naive recurrence, blockwise attention, RoPE, norms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.ref import attention_ref
+from repro.models.attention import blockwise_attention
+from repro.models.flash_balanced import balanced_causal_fwd
+from repro.models.flash_vjp import flash_attention_jax
+from repro.models.layers import apply_rope, nonparam_layernorm, rmsnorm
+from repro.models.ssm import ssd_chunked
+
+
+def rnd(seed, shape, scale=0.5):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+class TestBlockwiseAttention:
+    @pytest.mark.parametrize("t,s,causal", [(96, 96, True), (64, 128, False), (100, 100, True)])
+    def test_matches_dense(self, t, s, causal):
+        q, k, v = rnd(0, (2, 4, t, 32)), rnd(1, (2, 2, s, 32)), rnd(2, (2, 2, s, 32), 1.0)
+        got = blockwise_attention(q, k, v, causal=causal, q_block=32, kv_block=32)
+        np.testing.assert_allclose(
+            got, attention_ref(q, k, v, causal=causal), atol=2e-3, rtol=2e-3
+        )
+
+
+class TestFlashVJP:
+    def test_forward_matches_dense(self):
+        q, k, v = rnd(0, (2, 4, 96, 32)), rnd(1, (2, 2, 96, 32)), rnd(2, (2, 2, 96, 32), 1.0)
+        got = flash_attention_jax(q, k, v, True, 32, 32, 0)
+        np.testing.assert_allclose(
+            got, attention_ref(q, k, v, causal=True), atol=2e-3, rtol=2e-3
+        )
+
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("scheme", ["full", "balanced"])
+    def test_gradients_match_dense(self, causal, scheme):
+        q, k, v = rnd(0, (1, 4, 64, 16)), rnd(1, (1, 2, 64, 16)), rnd(2, (1, 2, 64, 16), 1.0)
+
+        def f(q, k, v):
+            return jnp.sum(jnp.sin(flash_attention_jax(q, k, v, causal, 32, 32, 0, scheme)))
+
+        def g(q, k, v):
+            return jnp.sum(jnp.sin(attention_ref(q, k, v, causal=causal)))
+
+        g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, atol=5e-4, rtol=5e-3)
+
+    def test_no_quadratic_residuals(self):
+        """The VJP must not save (T, S)-shaped tensors: check the jaxpr of the
+        fwd pass residuals stay O(T)."""
+        q, k, v = rnd(0, (1, 2, 256, 16)), rnd(1, (1, 2, 256, 16)), rnd(2, (1, 2, 256, 16))
+        _, vjp = jax.vjp(lambda *a: flash_attention_jax(*a, True, 64, 64, 0), q, k, v)
+        max_elems = max(
+            int(np.prod(x.shape)) for x in jax.tree.leaves(vjp) if hasattr(x, "shape")
+        )
+        # largest residual should be O(T*D)-ish, far below T*S = 65536*heads
+        assert max_elems <= 256 * 16 * 2 * 2  # (B*H*T*D)
+
+
+class TestBalancedScheme:
+    @pytest.mark.parametrize("t,bq", [(128, 32), (96, 32), (160, 32), (64, 64)])
+    def test_matches_dense(self, t, bq):
+        q, k, v = rnd(0, (2, 4, t, 32)), rnd(1, (2, 2, t, 32)), rnd(2, (2, 2, t, 32), 1.0)
+        out, lse = balanced_causal_fwd(q, k, v, q_block=bq)
+        np.testing.assert_allclose(
+            out, attention_ref(q, k, v, causal=True), atol=2e-3, rtol=2e-3
+        )
+
+    def test_lse_matches_full_scheme(self):
+        from repro.models.flash_vjp import _fwd_impl
+
+        q, k, v = rnd(0, (1, 2, 128, 16)), rnd(1, (1, 2, 128, 16)), rnd(2, (1, 2, 128, 16))
+        _, lse_full = _fwd_impl(q, k, v, True, 32, 32, 0, "full")
+        _, lse_bal = _fwd_impl(q, k, v, True, 32, 32, 0, "balanced")
+        np.testing.assert_allclose(lse_full, lse_bal, atol=1e-4, rtol=1e-4)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("chunk", [8, 16, 64])
+    def test_matches_recurrence(self, chunk):
+        B, L, H, P, N = 2, 64, 3, 8, 16
+        x = rnd(0, (B, L, H, P))
+        dt = jax.nn.softplus(rnd(1, (B, L, H), 1.0))
+        a = -jnp.exp(rnd(2, (H,), 0.3))
+        b_in, c_in = rnd(3, (B, L, N)), rnd(4, (B, L, N))
+
+        s = np.zeros((B, H, P, N))
+        ys = []
+        for t in range(L):
+            da = np.exp(np.asarray(dt[:, t]) * np.asarray(a)[None])
+            upd = np.einsum(
+                "bh,bhp,bn->bhpn", np.asarray(dt[:, t]), np.asarray(x[:, t]), np.asarray(b_in[:, t])
+            )
+            s = s * da[:, :, None, None] + upd
+            ys.append(np.einsum("bhpn,bn->bhp", s, np.asarray(c_in[:, t])))
+        y_ref = np.stack(ys, 1)
+
+        y, s_final = ssd_chunked(x, dt, a, b_in, c_in, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(s_final), s, atol=1e-4, rtol=1e-3)
+
+    def test_init_state_continuation(self):
+        """ssd(x, init_state) == ssd over the concatenated sequence (chunked
+        prefill correctness for the SSM serving path)."""
+        B, L, H, P, N = 1, 32, 2, 4, 8
+        x = rnd(0, (B, 2 * L, H, P))
+        dt = jax.nn.softplus(rnd(1, (B, 2 * L, H), 1.0))
+        a = -jnp.exp(rnd(2, (H,), 0.3))
+        b_in, c_in = rnd(3, (B, 2 * L, N)), rnd(4, (B, 2 * L, N))
+        y_full, s_full = ssd_chunked(x, dt, a, b_in, c_in, chunk=8)
+        y1, s1 = ssd_chunked(x[:, :L], dt[:, :L], a, b_in[:, :L], c_in[:, :L], chunk=8)
+        y2, s2 = ssd_chunked(
+            x[:, L:], dt[:, L:], a, b_in[:, L:], c_in[:, L:], chunk=8, init_state=s1
+        )
+        np.testing.assert_allclose(y2, y_full[:, L:], atol=1e-4, rtol=1e-3)
+        np.testing.assert_allclose(s2, s_full, atol=1e-4, rtol=1e-3)
+
+
+class TestLayers:
+    def test_rope_preserves_norm(self):
+        x = rnd(0, (2, 8, 4, 32), 1.0)
+        pos = jnp.arange(8)[None, :]
+        y = apply_rope(x, pos)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-5
+        )
+
+    def test_rope_relative_property(self):
+        """<rope(q,i), rope(k,j)> depends only on i-j."""
+        q = rnd(0, (1, 1, 1, 16), 1.0)
+        k = rnd(1, (1, 1, 1, 16), 1.0)
+
+        def dot_at(i, j):
+            qi = apply_rope(jnp.broadcast_to(q, (1, 1, 1, 16)), jnp.array([[i]]))
+            kj = apply_rope(jnp.broadcast_to(k, (1, 1, 1, 16)), jnp.array([[j]]))
+            return float(jnp.sum(qi * kj))
+
+        assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+
+    @given(st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_nonparam_ln_standardizes(self, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (4, 64)) * 3 + 1
+        y = nonparam_layernorm(x)
+        np.testing.assert_allclose(np.mean(np.asarray(y), -1), 0, atol=1e-4)
+        np.testing.assert_allclose(np.std(np.asarray(y), -1), 1, atol=1e-2)
+
+    def test_rmsnorm_scale_zero_is_identity_gain(self):
+        x = rnd(0, (2, 16), 1.0)
+        y = rmsnorm(x, jnp.zeros(16))
+        rms = jnp.sqrt(jnp.mean(x * x, -1, keepdims=True))
+        np.testing.assert_allclose(y, x / rms, rtol=1e-5)

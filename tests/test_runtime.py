@@ -1,0 +1,294 @@
+"""Runtime tests: data pipeline, checkpointing, fault tolerance, trainer,
+gradient compression, serving engine."""
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core.admm import SalaadConfig
+from repro.core.selection import SelectionConfig
+from repro.data.synthetic import DataConfig, SyntheticC4
+from repro.models import model as model_lib
+from repro.optim.adam import AdamConfig, AdamState, adam_update, init_adam
+from repro.optim.schedule import warmup_cosine
+from repro.parallel.compression import (
+    compressed_psum_tree,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.train import checkpoint
+from repro.train.fault import RetryPolicy, StragglerDetector, Watchdog
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+class TestData:
+    def test_deterministic(self):
+        d = SyntheticC4(DataConfig(vocab_size=100, seq_len=16, global_batch=4))
+        b1, b2 = d.batch(7), d.batch(7)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_steps_differ(self):
+        d = SyntheticC4(DataConfig(vocab_size=100, seq_len=16, global_batch=4))
+        assert not np.array_equal(d.batch(0)["tokens"], d.batch(1)["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        d = SyntheticC4(DataConfig(vocab_size=100, seq_len=16, global_batch=2))
+        b = d.batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_host_slicing_disjoint_and_shaped(self):
+        d = SyntheticC4(DataConfig(vocab_size=100, seq_len=8, global_batch=8))
+        b0 = d.batch(3, host_id=0, num_hosts=4)
+        b1 = d.batch(3, host_id=1, num_hosts=4)
+        assert b0["tokens"].shape == (2, 8)
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+    def test_learnable_structure(self):
+        """Markov structure => bigram entropy < unigram entropy."""
+        d = SyntheticC4(DataConfig(vocab_size=50, seq_len=512, global_batch=8))
+        toks = d.batch(0)["tokens"].ravel()
+        # successor agreement: P(pair repeats) far above uniform
+        pairs = set(zip(toks[:-1].tolist(), toks[1:].tolist()))
+        assert len(pairs) < 0.8 * (len(toks) - 1)
+
+
+class TestAdam:
+    def test_moves_toward_minimum(self):
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = init_adam(params)
+        cfg = AdamConfig(lr=0.1, grad_clip=0.0)
+        for _ in range(200):
+            g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, state = adam_update(g, state, params, cfg)
+        np.testing.assert_allclose(params["w"], [0, 0], atol=1e-2)
+
+    def test_grad_clip(self):
+        params = {"w": jnp.zeros(3)}
+        state = init_adam(params)
+        cfg = AdamConfig(lr=1.0, grad_clip=1.0)
+        g = {"w": jnp.array([1e6, 0.0, 0.0])}
+        new, _ = adam_update(g, state, params, cfg)
+        assert float(jnp.abs(new["w"]).max()) < 10.0
+
+    def test_moments_are_f32_for_bf16_params(self):
+        params = {"w": jnp.zeros(3, jnp.bfloat16)}
+        st = init_adam(params)
+        assert st.mu["w"].dtype == jnp.float32
+
+    def test_schedule_shape(self):
+        s0 = float(warmup_cosine(0, warmup=10, total=100))
+        s_mid = float(warmup_cosine(10, warmup=10, total=100))
+        s_end = float(warmup_cosine(100, warmup=10, total=100))
+        assert s0 == 0.0 and s_mid == pytest.approx(1.0) and s_end == pytest.approx(0.1)
+
+
+@pytest.fixture()
+def tiny_state():
+    cfg = get_arch("salaad_llama_60m").reduced()
+    tcfg = TrainerConfig(
+        total_steps=4,
+        salaad=SalaadConfig(
+            selection=SelectionConfig(min_dim=16), rho_constant=5.0,
+            update_every=2, exact_svd=True,
+        ),
+        log_every=1,
+    )
+    tr = Trainer(cfg, tcfg)
+    state = tr.init(jax.random.PRNGKey(0))
+    data = SyntheticC4(DataConfig(cfg.vocab_size, 16, 4))
+    return cfg, tr, state, data
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tiny_state, tmp_path):
+        cfg, tr, state, data = tiny_state
+        state = tr.fit(state, data, steps=2)
+        path = checkpoint.save(str(tmp_path), 2, state)
+        assert os.path.isdir(path)
+        restored = checkpoint.restore(str(tmp_path), state)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32), atol=2e-2
+            )
+
+    def test_latest_and_gc(self, tiny_state, tmp_path):
+        cfg, tr, state, data = tiny_state
+        for s in (1, 2, 3, 4, 5):
+            checkpoint.save(str(tmp_path), s, {"x": jnp.ones(3) * s}, keep=2)
+        assert checkpoint.latest_step(str(tmp_path)) == 5
+        assert sorted(checkpoint.all_steps(str(tmp_path))) == [4, 5]
+
+    def test_crash_safety_partial_write_ignored(self, tmp_path):
+        """A temp dir left by a crashed writer is invisible to restore."""
+        checkpoint.save(str(tmp_path), 1, {"x": jnp.ones(2)})
+        os.makedirs(tmp_path / ".tmp.2.999", exist_ok=True)
+        (tmp_path / ".tmp.2.999" / "arrays.npz").write_bytes(b"garbage")
+        assert checkpoint.latest_step(str(tmp_path)) == 1
+        restored = checkpoint.restore(str(tmp_path), {"x": jnp.zeros(2)})
+        np.testing.assert_array_equal(restored["x"], [1, 1])
+
+    def test_restart_replays_identically(self, tiny_state, tmp_path):
+        """Train 4 steps straight == train 2, checkpoint, restore, train 2."""
+        cfg, tr, state, data = tiny_state
+        s_full = tr.fit(state, data, steps=4)
+
+        tr2 = Trainer(cfg, tr.tcfg)
+        s2 = tr2.init(jax.random.PRNGKey(0))
+        s2 = tr2.fit(s2, data, steps=2)
+        checkpoint.save(str(tmp_path), 2, s2)
+        s3 = checkpoint.restore(str(tmp_path), s2)
+        s3 = tr2.fit(s3, data, steps=4)  # resumes at step 2
+        np.testing.assert_allclose(
+            np.asarray(s_full.params["embed"]["embedding"]),
+            np.asarray(s3.params["embed"]["embedding"]),
+            atol=1e-5,
+        )
+
+    def test_dtype_cast_on_restore(self, tmp_path):
+        checkpoint.save(str(tmp_path), 1, {"x": jnp.ones(3, jnp.bfloat16)})
+        out = checkpoint.restore(str(tmp_path), {"x": jnp.zeros(3, jnp.bfloat16)})
+        assert out["x"].dtype == jnp.bfloat16
+
+
+class TestFault:
+    def test_straggler_detection(self):
+        det = StragglerDetector(threshold=2.0, evict_after=3)
+        for _ in range(10):
+            det.update(1.0)
+        assert det.update(5.0) is True
+        assert not det.should_evict
+        det.update(5.0)
+        det.update(5.0)
+        assert det.should_evict
+
+    def test_straggler_warmup_tolerates_compile(self):
+        det = StragglerDetector()
+        assert det.update(100.0) is False  # first (compile) step
+
+    def test_watchdog(self):
+        with Watchdog(0.05) as wd:
+            time.sleep(0.15)
+        assert wd.expired
+        with Watchdog(5.0) as wd:
+            pass
+        assert not wd.expired
+
+    def test_retry_policy(self):
+        calls = []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise OSError("transient")
+            return "ok"
+
+        assert RetryPolicy(max_retries=3, backoff_s=0.01).run(flaky) == "ok"
+        assert len(calls) == 3
+
+    def test_retry_gives_up_on_permanent(self):
+        def perm():
+            raise ValueError("permanent")
+
+        with pytest.raises(ValueError):
+            RetryPolicy(max_retries=2, backoff_s=0.01).run(
+                perm, is_transient=lambda e: isinstance(e, OSError)
+            )
+
+
+class TestGradCompression:
+    def test_quantize_roundtrip_error_bound(self):
+        g = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+        q, scale = quantize_int8(g)
+        err = jnp.abs(dequantize_int8(q, scale) - g)
+        assert float(err.max()) <= float(scale) * 0.5 + 1e-6
+
+    def test_compressed_psum_matches_mean(self):
+        """int8 all-reduce mean within quantization error of the exact mean."""
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        n = mesh.shape["data"]
+        g = jax.random.normal(jax.random.PRNGKey(1), (n, 64))
+
+        fn = shard_map(
+            lambda x: compressed_psum_tree({"g": x[0]}, "data")["g"][None],
+            mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_rep=False,
+        )
+        out = fn(g)  # (n, 64): each shard returns the reduced mean
+        exact = jnp.mean(g, axis=0)
+        scale = float(jnp.abs(g).max()) / 127
+        np.testing.assert_allclose(out[0], exact, atol=2 * scale)
+
+    def test_error_feedback_reduces_bias(self):
+        mesh = jax.make_mesh((1,), ("data",))
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        g = {"w": jnp.full((64,), 0.003)}  # small constant grad: EF must not lose it
+        r = {"w": jnp.zeros((64,))}
+
+        def step(gv, rv):
+            return compressed_psum_tree({"w": gv}, "data", {"w": rv})
+
+        fn = shard_map(
+            lambda gv, rv: step(gv[0], rv[0]),
+            mesh=mesh, in_specs=(P("data"), P("data")), out_specs=P("data"),
+            check_rep=False,
+        )
+        total = jnp.zeros(64)
+        gg, rr = g["w"][None], r["w"][None]
+        for _ in range(10):
+            out, new_r = fn(gg, rr)
+            total = total + out["w"][0]
+            rr = new_r["w"][None] if isinstance(new_r, dict) else new_r
+        # accumulated EF output ~ 10 * g despite each step quantizing hard
+        np.testing.assert_allclose(total, 0.03 * jnp.ones(64), rtol=0.2)
+
+
+class TestServingEngine:
+    def test_batch_serving_completes(self):
+        from repro.serving.engine import EngineConfig, ServingEngine
+
+        cfg = get_arch("olmo_1b").reduced()
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=32))
+        uids = [eng.submit([1, 2, 3], max_new_tokens=4) for _ in range(5)]
+        done = eng.run()
+        assert len(done) == 5
+        assert all(len(r.out_tokens) == 4 for r in done)
+
+    def test_engine_matches_direct_decode(self):
+        """Engine output == greedy decode with the plain model API."""
+        from repro.serving.engine import EngineConfig, ServingEngine
+
+        cfg = get_arch("olmo_1b").reduced()
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        prompt = [5, 7, 11]
+        eng = ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=32))
+        eng.submit(prompt, max_new_tokens=3)
+        out = eng.run()[0].out_tokens
+
+        # reference: same per-token decode path with a private batch-1 cache
+        # (tests slot isolation / cache bookkeeping in the engine)
+        cache = model_lib.init_cache(cfg, 1, 32, dtype=jnp.float32)
+        tok = None
+        ref = []
+        for t in prompt:
+            lg, cache = model_lib.decode_step(
+                params, jnp.asarray([[t]], jnp.int32), cache, cfg
+            )
+        tok = int(jnp.argmax(lg[0, -1]))
+        ref.append(tok)
+        for _ in range(2):
+            lg, cache = model_lib.decode_step(
+                params, jnp.asarray([[tok]], jnp.int32), cache, cfg
+            )
+            tok = int(jnp.argmax(lg[0, -1]))
+            ref.append(tok)
+        assert out == ref

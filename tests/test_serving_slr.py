@@ -1,0 +1,102 @@
+"""Deployment-path tests: SLR parameter formats, kernels vs XLA fallback,
+deployment accounting, and the surrogate-equals-deployed invariant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core.admm import SalaadConfig, admm_update, init_slr_state, surrogate_params
+from repro.core.hpa import hpa_keep_ratio
+from repro.core.selection import SelectionConfig
+from repro.models import model as model_lib
+from repro.serving.slr_params import build_slr_linears, deployment_report
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_arch("olmo_1b").reduced()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = SalaadConfig(
+        selection=SelectionConfig(min_dim=16), rho_constant=5.0, exact_svd=True
+    )
+    state, blocks = init_slr_state(params, scfg)
+    for step in range(4):
+        state, _ = admm_update(params, state, blocks, scfg, step)
+    return cfg, params, state, blocks
+
+
+class TestSLRLinears:
+    def test_factored_apply_matches_surrogate(self, trained):
+        cfg, params, state, blocks = trained
+        linears = build_slr_linears(state, blocks, fmt="factored")
+        surr = surrogate_params(params, state, blocks)
+        info = next(b for b in blocks if not b.stack_dims)
+        lin = linears[info.name]
+        w_surr = surr
+        for p in info.path:
+            w_surr = w_surr[getattr(p, "key", getattr(p, "idx", None))]
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, info.n))
+        np.testing.assert_allclose(
+            lin.apply(x), x @ w_surr, atol=1e-3, rtol=1e-3
+        )
+
+    def test_bsr_kernel_matches_xla(self, trained):
+        cfg, params, state, blocks = trained
+        linears = build_slr_linears(state, blocks, fmt="bsr", bsr_block=32)
+        checked = 0
+        for info in blocks:
+            lin = linears[info.name]
+            if lin.p is None or lin.p.ndim != 2:
+                continue
+            x = jax.random.normal(jax.random.PRNGKey(2), (8, info.n))
+            np.testing.assert_allclose(
+                lin.apply(x, kernel=True), lin.apply(x, kernel=False),
+                atol=2e-3, rtol=2e-3,
+            )
+            checked += 1
+        assert checked >= 1
+
+    def test_param_bytes_drop_after_hpa(self, trained):
+        cfg, params, state, blocks = trained
+        before = deployment_report(params, state, blocks)
+        comp, _ = hpa_keep_ratio(state, blocks, keep_ratio=0.4, kappa=0.7)
+        after = deployment_report(params, comp, blocks)
+        assert after["slr_total_bytes"] < before["slr_total_bytes"]
+        assert after["compression"] > before["compression"]
+
+    def test_deployed_model_runs(self, trained):
+        """HPA-compressed surrogate params drive the unchanged model code."""
+        cfg, params, state, blocks = trained
+        comp, _ = hpa_keep_ratio(state, blocks, keep_ratio=0.5, kappa=0.7)
+        deploy = surrogate_params(params, comp, blocks)
+        batch = {
+            "tokens": jnp.ones((2, 8), jnp.int32),
+            "labels": jnp.ones((2, 8), jnp.int32),
+        }
+        loss, _ = model_lib.loss_fn(deploy, batch, cfg)
+        assert np.isfinite(float(loss))
+
+
+class TestBenchmarkModules:
+    """Smoke the benchmark harness entry points at minimal sizes."""
+
+    def test_fig2_overhead(self):
+        from benchmarks import fig2_overhead
+
+        r = fig2_overhead.run(steps=2)
+        assert r["train_step_s"] > 0 and r["admm_step_s"] > 0
+
+    def test_table10_freq_trend(self):
+        from benchmarks import table10_freq
+
+        rows = table10_freq.run(steps=8, ks=(2, 8))
+        by_k = {r["K"]: r for r in rows}
+        # more frequent ADMM (smaller K) tracks better: lower recon error
+        assert by_k[2]["final_recon"] <= by_k[8]["final_recon"] * 1.5
+
+    def test_roofline_loader(self):
+        from benchmarks import roofline
+
+        recs = roofline.load_records()  # may be empty before the sweep
+        assert isinstance(recs, list)
