@@ -1,0 +1,21 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench serve-demo
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# quick serving-throughput benchmark (interpret-mode kernels on CPU)
+bench-smoke:
+	$(PYTHON) -m benchmarks.serve_throughput --quick
+
+# full scaled-down paper benchmark suite
+bench:
+	$(PYTHON) -m benchmarks.run --quick
+
+# elastic-deployment spectrum through the batched SLR engine
+serve-demo:
+	$(PYTHON) -m repro.launch.serve --arch salaad_llama_60m --reduced \
+	    --keep-ratios 1.0,0.6,0.3 --fmt factored --requests 8

@@ -67,13 +67,21 @@ def run(steps: int = 60, budgets=(1.0, 0.8, 0.6, 0.4, 0.25)) -> list[dict]:
     cfg = bench_arch()
     rows = []
 
-    # SALAAD path
+    # SALAAD path — each budget is ALSO evaluated through the deployed
+    # factored (L + S) representation (serving/deployed.py): the elastic
+    # spectrum must hold on the fast path, not just on re-materialized
+    # dense weights.
+    from repro.serving.deployed import DeployedModel
+
     tr, state = train_salaad(cfg, steps=steps)
     for keep in budgets:
         slr_c, rep = hpa_keep_ratio(state.slr, tr.blocks, keep, kappa=0.7)
         params_c = surrogate_params(state.params, slr_c, tr.blocks)
+        deployed = DeployedModel.build(cfg, state.params, slr_c, tr.blocks, fmt="factored")
         rows.append(
             {"path": "salaad", "keep": keep, "ppl": ppl(eval_loss(params_c, cfg)),
+             "ppl_deployed": ppl(eval_loss(deployed.params, cfg)),
+             "served_bytes": deployed.param_bytes()["total_bytes"],
              "slr_params": rep["params_after"]}
         )
 
@@ -112,9 +120,13 @@ def run(steps: int = 60, budgets=(1.0, 0.8, 0.6, 0.4, 0.25)) -> list[dict]:
 
 def main(steps: int = 60):
     for r in run(steps):
+        extra = (
+            f";ppl_deployed={r['ppl_deployed']:.2f};served_bytes={r['served_bytes']}"
+            if "ppl_deployed" in r else ""
+        )
         emit(
             f"fig3/{r['path']}/keep={r['keep']}", 0.0,
-            f"ppl={r['ppl']:.2f};slr_params={r['slr_params']}",
+            f"ppl={r['ppl']:.2f};slr_params={r['slr_params']}{extra}",
         )
 
 

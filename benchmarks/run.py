@@ -26,6 +26,7 @@ def main() -> None:
         fig3_elastic,
         fig4_kappa,
         roofline,
+        serve_throughput,
         table1_pretrain,
         table3_ablation,
         table10_freq,
@@ -40,6 +41,7 @@ def main() -> None:
         "table3": lambda: table3_ablation.main(max(steps // 2, 20)),
         "table10": lambda: table10_freq.main(max(steps // 2, 20)),
         "appA": lambda: appA_rpca.main(max(steps // 2, 20)),
+        "serve": lambda: serve_throughput.main(max(steps // 2, 10)),
         "roofline": roofline.main,
     }
     failures = 0

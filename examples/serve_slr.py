@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_arch
-from repro.core.admm import SalaadConfig, surrogate_params
+from repro.core.admm import SalaadConfig
 from repro.core.hpa import hpa_keep_ratio
 from repro.core.selection import SelectionConfig
 from repro.data.synthetic import DataConfig, SyntheticC4
@@ -32,13 +32,19 @@ def main():
     data = SyntheticC4(DataConfig(cfg.vocab_size, 32, 8))
     state = trainer.fit(state, data)
 
-    # compress + materialize the deployed model (architecture unchanged)
-    slr_c, rep = hpa_keep_ratio(state.slr, trainer.blocks, keep_ratio=0.7, kappa=0.7)
-    params = surrogate_params(state.params, slr_c, trainer.blocks)
-    print(f"deployed at keep=0.7: slr_params={rep['params_after']}")
+    # compress + deploy WITHOUT dense materialization: the engine consumes
+    # the factored (p, vt) + COO S representation directly
+    from repro.serving.deployed import DeployedModel
 
-    # batched serving
-    engine = ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=48))
+    slr_c, rep = hpa_keep_ratio(state.slr, trainer.blocks, keep_ratio=0.7, kappa=0.7)
+    deployed = DeployedModel.build(cfg, state.params, slr_c, trainer.blocks, fmt="factored")
+    print(
+        f"deployed at keep=0.7: slr_params={rep['params_after']} "
+        f"served_bytes={deployed.param_bytes()['total_bytes']}"
+    )
+
+    # batched serving straight off the SLR weights
+    engine = ServingEngine(cfg, deployed, EngineConfig(max_slots=2, max_len=48))
     for i in range(4):
         engine.submit([1 + i, 2, 3], max_new_tokens=6)
     t0 = time.time()

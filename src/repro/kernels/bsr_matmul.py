@@ -28,6 +28,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 __all__ = ["BsrMatrix", "bsr_from_dense", "bsr_to_dense", "bsr_matmul_pallas"]
 
 
@@ -160,7 +162,7 @@ def bsr_matmul_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t_pad, m), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")
         ),
     )(scalars, x, bsr.vals)

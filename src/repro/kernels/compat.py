@@ -1,0 +1,12 @@
+"""jax version compatibility for the Pallas TPU kernels.
+
+``pltpu.CompilerParams`` was named ``TPUCompilerParams`` before jax 0.5.x;
+resolve whichever this container ships so the kernels import everywhere.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

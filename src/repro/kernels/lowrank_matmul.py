@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _kernel(x_ref, p_ref, vt_ref, y_ref, t_ref, *, k_tiles: int):
     phase = pl.program_id(1)
@@ -104,7 +106,7 @@ def lowrank_matmul_pallas(
         out_shape=jax.ShapeDtypeStruct((t_pad, m_pad), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, r), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
     )(x, p, vt)[:t_dim, :m_dim]

@@ -1,8 +1,9 @@
-"""Serving launcher: load a checkpoint (or fresh init), optionally deploy the
-SLR surrogate at a parameter budget (HPA), and serve batched requests.
+"""Serving launcher: load a checkpoint (or fresh init), deploy the SLR model
+across one or more HPA budgets, and serve batched requests through the
+SLR-native engine — the elastic-deployment spectrum through the fast path.
 
   python -m repro.launch.serve --arch salaad_llama_60m --reduced \
-      --keep-ratio 0.6 --kappa 0.7 --requests 8
+      --keep-ratios 1.0,0.6,0.3 --fmt factored --kappa 0.7 --requests 8
 """
 from __future__ import annotations
 
@@ -14,12 +15,35 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_arch
-from repro.core.admm import SalaadConfig, init_slr_state, surrogate_params
+from repro.core.admm import SalaadConfig, init_slr_state
 from repro.core.hpa import hpa_keep_ratio
 from repro.core.selection import SelectionConfig
 from repro.models import model as model_lib
-from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.deployed import DeployedModel
+from repro.serving.engine import (
+    BATCHED_FAMILIES,
+    EngineConfig,
+    ReferenceEngine,
+    ServingEngine,
+)
 from repro.serving.slr_params import deployment_report
+
+
+def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int) -> dict:
+    rng = np.random.RandomState(seed)
+    for _ in range(requests):
+        prompt = rng.randint(0, vocab, size=rng.randint(2, 8)).tolist()
+        engine.submit(prompt, max_new_tokens=max_new)
+    t0 = time.time()
+    done = engine.run()
+    dt = time.time() - t0
+    total_tokens = sum(len(r.out_tokens) for r in done)
+    return {
+        "requests": len(done),
+        "tokens": total_tokens,
+        "tok_per_s": round(total_tokens / max(dt, 1e-9), 2),
+        "sample": done[0].out_tokens if done else [],
+    }
 
 
 def main():
@@ -27,10 +51,17 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--keep-ratio", type=float, default=None, help="HPA budget")
+    ap.add_argument(
+        "--keep-ratios", default=None,
+        help="comma-separated HPA budgets, e.g. 1.0,0.6,0.3 (omit: serve dense init)",
+    )
+    ap.add_argument("--fmt", default="factored", choices=("dense", "factored", "bsr"))
+    ap.add_argument("--engine", default="batched", choices=("batched", "reference"))
     ap.add_argument("--kappa", type=float, default=0.7)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -41,45 +72,48 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     params = model_lib.init_params(cfg, key)
 
+    scfg = SalaadConfig(selection=SelectionConfig(min_dim=16))
     if args.ckpt_dir:
         from repro.train import checkpoint
         from repro.train.state import init_train_state
 
-        scfg = SalaadConfig(selection=SelectionConfig(min_dim=16))
         state, blocks = init_train_state(params, scfg)
         state = checkpoint.restore(args.ckpt_dir, state)
         slr, params = state.slr, state.params
     else:
-        scfg = SalaadConfig(selection=SelectionConfig(min_dim=16))
         slr, blocks = init_slr_state(params, scfg)
 
-    if args.keep_ratio is not None:
-        slr, report = hpa_keep_ratio(slr, blocks, args.keep_ratio, args.kappa)
-        print("HPA:", json.dumps(report))
-        params = surrogate_params(params, slr, blocks)
-        print("deployment:", json.dumps(
-            {k: v for k, v in deployment_report(params, slr, blocks).items() if k != "blocks"}
-        ))
+    engine_cls = ServingEngine if args.engine == "batched" else ReferenceEngine
+    if engine_cls is ServingEngine and cfg.family not in BATCHED_FAMILIES:
+        print(json.dumps({"note": f"family {cfg.family!r} has no per-slot-length "
+                          "cache yet; falling back to the reference engine"}))
+        engine_cls = ReferenceEngine
+    ecfg = EngineConfig(max_slots=args.max_slots, max_len=args.max_len)
 
-    engine = ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=64))
-    rng = np.random.RandomState(args.seed)
-    for _ in range(args.requests):
-        prompt = rng.randint(0, cfg.vocab_size, size=rng.randint(2, 8)).tolist()
-        engine.submit(prompt, max_new_tokens=args.max_new)
-    t0 = time.time()
-    done = engine.run()
-    dt = time.time() - t0
-    total_tokens = sum(len(r.out_tokens) for r in done)
-    print(
-        json.dumps(
-            {
-                "requests": len(done),
-                "tokens": total_tokens,
-                "tok_per_s": round(total_tokens / max(dt, 1e-9), 2),
-                "sample": done[0].out_tokens if done else [],
-            }
-        )
-    )
+    if args.keep_ratios is None:
+        engine = engine_cls(cfg, params, ecfg)
+        print(json.dumps({"budget": None, "fmt": "dense-init",
+                          **serve_batch(engine, cfg.vocab_size, args.requests,
+                                        args.max_new, args.seed)}))
+        return
+
+    # one SALAAD state, a spectrum of served capacities — each budget deploys
+    # and serves through the same batched SLR-native programs
+    for keep in [float(k) for k in args.keep_ratios.split(",")]:
+        slr_c, report = hpa_keep_ratio(slr, blocks, keep, args.kappa)
+        deployed = DeployedModel.build(cfg, params, slr_c, blocks, fmt=args.fmt)
+        engine = engine_cls(cfg, deployed, ecfg)
+        stats = serve_batch(engine, cfg.vocab_size, args.requests, args.max_new, args.seed)
+        dep = deployment_report(params, slr_c, blocks)
+        print(json.dumps({
+            "budget": keep,
+            "fmt": args.fmt,
+            "slr_params": report["params_after"],
+            "served_bytes": deployed.param_bytes()["total_bytes"],
+            "slr_total_bytes": dep["slr_total_bytes"],
+            "compression": round(dep["compression"], 3),
+            **stats,
+        }))
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .layers import apply_rope
+from .layers import apply_rope, apply_weight
 
 NEG_INF = -1e30
 
@@ -26,7 +26,7 @@ NEG_INF = -1e30
 class KVCache(NamedTuple):
     k: jax.Array  # (B, Hkv, S, D)
     v: jax.Array  # (B, Hkv, S, D)
-    length: jax.Array  # () int32 — valid prefix
+    length: jax.Array  # () int32 valid prefix — or (B,) for per-slot lengths
 
 
 def init_qkv(key, d_model, n_heads, n_kv, head_dim, dtype, bias=False):
@@ -47,7 +47,7 @@ def init_qkv(key, d_model, n_heads, n_kv, head_dim, dtype, bias=False):
 
 
 def _proj(x, w, b=None):
-    y = x @ w
+    y = apply_weight(x, w)
     if b is not None:
         y = y + b
     return y
@@ -175,12 +175,21 @@ def attention_block(
         vh = v.transpose(0, 2, 1, 3)
         if cache is not None:
             # insert at cache.length (decode: t == 1; chunked prefill: t == chunk)
-            kc = jax.lax.dynamic_update_slice(
-                cache.k, kh.astype(cache.k.dtype), (0, 0, cache.length, 0)
-            )
-            vc = jax.lax.dynamic_update_slice(
-                cache.v, vh.astype(cache.v.dtype), (0, 0, cache.length, 0)
-            )
+            if jnp.ndim(cache.length) == 0:
+                kc = jax.lax.dynamic_update_slice(
+                    cache.k, kh.astype(cache.k.dtype), (0, 0, cache.length, 0)
+                )
+                vc = jax.lax.dynamic_update_slice(
+                    cache.v, vh.astype(cache.v.dtype), (0, 0, cache.length, 0)
+                )
+            else:
+                # per-slot lengths (batched serving): each sequence inserts at
+                # its own write position — vmapped slice-update over batch
+                ins = jax.vmap(
+                    lambda ck, kn, pos: jax.lax.dynamic_update_slice(ck, kn, (0, pos, 0))
+                )
+                kc = ins(cache.k, kh.astype(cache.k.dtype), cache.length)
+                vc = ins(cache.v, vh.astype(cache.v.dtype), cache.length)
             new_cache = KVCache(kc, vc, cache.length + t)
             kh, vh = kc, vc
         else:
@@ -194,6 +203,11 @@ def attention_block(
             # materialize (T, S) scores (34 GB/device measured on zamba2
             # prefill_32k) — use the flash path with a causal offset so query
             # i attends keys <= cache.length + i.
+            if jnp.ndim(cache.length) != 0:
+                raise NotImplementedError(
+                    "chunked prefill against a per-slot-length cache; batched "
+                    "serving prefills with cache=None and scatters into slots"
+                )
             from .flash_vjp import flash_attention_jax
 
             out = flash_attention_jax(
@@ -206,10 +220,16 @@ def attention_block(
             group = n_heads // n_kv
             qg = qh.reshape(b, n_kv, group, t, head_dim).astype(jnp.float32) * scale
             sc = jnp.einsum("bhgtd,bhsd->bhgts", qg, kh.astype(jnp.float32))
-            k_idx = jnp.arange(s)[None, :]
-            q_idx = cache.length + jnp.arange(t)[:, None]
-            mask = k_idx <= q_idx  # causal within valid prefix
-            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            k_idx = jnp.arange(s)
+            if jnp.ndim(cache.length) == 0:
+                q_idx = cache.length + jnp.arange(t)[:, None]
+                mask = k_idx[None, :] <= q_idx          # (t, s) causal prefix
+                sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            else:
+                # per-slot valid prefixes: query of slot b sits at length[b]
+                q_idx = cache.length[:, None] + jnp.arange(t)[None, :]
+                mask = k_idx[None, None, :] <= q_idx[..., None]  # (B, t, s)
+                sc = jnp.where(mask[:, None, None], sc, NEG_INF)
             w = jax.nn.softmax(sc, axis=-1)
             out = jnp.einsum("bhgts,bhsd->bhgtd", w, vh.astype(jnp.float32))
             out = out.reshape(b, n_heads, t, head_dim).astype(x.dtype)
@@ -233,4 +253,4 @@ def attention_block(
         # expose the projected/rotated KV heads so prefill can build a cache
         # without re-running the projections (or a dense-score path)
         new_cache = (kh, vh)
-    return out @ params["o"], new_cache
+    return apply_weight(out, params["o"]), new_cache

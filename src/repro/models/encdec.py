@@ -16,8 +16,8 @@ import numpy as np
 from ..parallel.sharding import constrain
 from .attention import KVCache, attention_block, init_qkv
 from .layers import (
-    apply_mlp, apply_norm, embed, init_embedding, init_mlp, init_norm,
-    sinusoidal_positions,
+    apply_mlp, apply_norm, apply_weight, embed, init_embedding, init_mlp,
+    init_norm, sinusoidal_positions,
 )
 
 
@@ -84,8 +84,8 @@ def encode(params, frames: jax.Array, cfg) -> jax.Array:
 
 def _cross_kv(lp_cross, enc_out, cfg):
     b, f, _ = enc_out.shape
-    k = (enc_out @ lp_cross["k"]).reshape(b, f, cfg.num_kv_heads, cfg.head_dim)
-    v = (enc_out @ lp_cross["v"]).reshape(b, f, cfg.num_kv_heads, cfg.head_dim)
+    k = apply_weight(enc_out, lp_cross["k"]).reshape(b, f, cfg.num_kv_heads, cfg.head_dim)
+    v = apply_weight(enc_out, lp_cross["v"]).reshape(b, f, cfg.num_kv_heads, cfg.head_dim)
     return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
 
 
@@ -160,7 +160,7 @@ def decode_stack(params, tokens, enc_out, cfg, cache: EncDecCache | None = None,
         new_cache = EncDecCache(k_n, v_n, cache.cross_k, cache.cross_v, cache.length + t)
 
     x = apply_norm(x, params.get("final_norm"), cfg.norm_type)
-    logits = x @ params["lm_head"]["w"]
+    logits = apply_weight(x, params["lm_head"]["w"])
     return constrain(logits, ("data", None, "model")), new_cache
 
 

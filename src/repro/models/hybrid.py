@@ -16,7 +16,7 @@ import numpy as np
 
 from ..parallel.sharding import constrain
 from .attention import KVCache, attention_block, init_qkv
-from .layers import apply_mlp, apply_norm, embed, init_embedding, init_mlp, init_norm
+from .layers import apply_mlp, apply_norm, apply_weight, embed, init_embedding, init_mlp, init_norm
 from .ssm import SSMCache, init_ssm_cache, init_ssm_layer, ssm_block, ssm_dims
 
 
@@ -141,7 +141,7 @@ def forward(params, tokens, cfg, *, cache: HybridCache | None = None, position_o
         )
 
     x = apply_norm(x, params.get("final_norm"), cfg.norm_type)
-    logits = x @ params["lm_head"]["w"]
+    logits = apply_weight(x, params["lm_head"]["w"])
     logits = constrain(logits, ("data", None, "model"))
     return logits, new_cache, jnp.zeros((), jnp.float32)
 

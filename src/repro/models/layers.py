@@ -11,6 +11,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# ------------------------------------------------------- pluggable linear ---
+
+
+def apply_weight(x: jax.Array, w) -> jax.Array:
+    """y = x @ w for a dense array OR any deployed-format weight object.
+
+    Every matmul against a model weight goes through here so serving can swap
+    dense matrices for structured ones (``serving.slr_params.SLRLinear`` in
+    factored / block-CSR form) without touching model code. Objects expose
+    ``apply(x)``; plain arrays take the ordinary einsum path.
+    """
+    if hasattr(w, "apply"):
+        return w.apply(x)
+    return x @ w
+
+
 # ----------------------------------------------------------------- norms ---
 
 
@@ -106,12 +122,14 @@ def init_mlp(key, d: int, d_ff: int, mlp_type: str, dtype) -> dict:
 
 def apply_mlp(params: dict, x: jax.Array, mlp_type: str) -> jax.Array:
     if mlp_type == "swiglu":
-        return (jax.nn.silu(x @ params["gate"]) * (x @ params["up"])) @ params["down"]
+        h = jax.nn.silu(apply_weight(x, params["gate"])) * apply_weight(x, params["up"])
+        return apply_weight(h, params["down"])
     if mlp_type == "geglu":
-        return (jax.nn.gelu(x @ params["gate"], approximate=True) * (x @ params["up"])) @ params["down"]
+        h = jax.nn.gelu(apply_weight(x, params["gate"]), approximate=True) * apply_weight(x, params["up"])
+        return apply_weight(h, params["down"])
     if mlp_type == "gelu":
-        h = jax.nn.gelu(x @ params["up"] + params["up_bias"], approximate=True)
-        return h @ params["down"] + params["down_bias"]
+        h = jax.nn.gelu(apply_weight(x, params["up"]) + params["up_bias"], approximate=True)
+        return apply_weight(h, params["down"]) + params["down_bias"]
     raise ValueError(mlp_type)
 
 
@@ -135,7 +153,7 @@ def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False) -> dict:
 
 
 def apply_linear(params: dict, x: jax.Array) -> jax.Array:
-    y = x @ params["w"]
+    y = apply_weight(x, params["w"])
     if "b" in params:
         y = y + params["b"]
     return y

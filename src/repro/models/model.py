@@ -96,11 +96,11 @@ def loss_fn(params, batch: dict, cfg: ArchConfig, aux_weight: float = 0.01):
 # --------------------------------------------------------------- serving ---
 
 
-def prefill(params, batch: dict, cfg: ArchConfig, max_len: int):
+def prefill(params, batch: dict, cfg: ArchConfig, max_len: int, cache_dtype=jnp.bfloat16):
     """Full-sequence forward building a decode cache. Returns (logits, cache)."""
     if cfg.family in ("dense", "moe", "vlm"):
         logits, kvs, _ = _forward(params, batch, cfg, collect_kv=True)
-        cache = transformer.cache_from_prefill(cfg, kvs, max_len)
+        cache = transformer.cache_from_prefill(cfg, kvs, max_len, dtype=cache_dtype)
         return logits, cache
     if cfg.family == "ssm":
         cache = ssm_lm.init_ssm_lm_cache(cfg, batch["tokens"].shape[0])

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..parallel.sharding import constrain
-from .layers import apply_norm, embed, init_embedding, init_norm
+from .layers import apply_norm, apply_weight, embed, init_embedding, init_norm
 from .ssm import SSMCache, init_ssm_layer, ssm_block, ssm_dims
 
 
@@ -68,7 +68,7 @@ def forward(params, tokens, cfg, *, cache: SSMLMCache | None = None, position_of
         new_cache = SSMLMCache(st_n, cv_n, cache.length + t)
 
     x = apply_norm(x, params.get("final_norm"), cfg.norm_type)
-    logits = x @ params["lm_head"]["w"]
+    logits = apply_weight(x, params["lm_head"]["w"])
     return constrain(logits, ("data", None, "model")), new_cache, jnp.zeros((), jnp.float32)
 
 

@@ -16,14 +16,14 @@ import numpy as np
 
 from ..parallel.sharding import constrain
 from .attention import KVCache, attention_block, init_qkv
-from .layers import apply_mlp, apply_norm, embed, init_embedding, init_mlp, init_norm
+from .layers import apply_mlp, apply_norm, apply_weight, embed, init_embedding, init_mlp, init_norm
 from .moe import init_moe, moe_ffn
 
 
 class LMCache(NamedTuple):
     k: jax.Array       # (L, B, Hkv, S, D)
     v: jax.Array
-    length: jax.Array  # ()
+    length: jax.Array  # () — or (B,) for per-slot serving lengths
 
 
 def init_layer(key, cfg) -> dict:
@@ -109,11 +109,21 @@ def forward(
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
     b, t, _ = x.shape
     x = constrain(x, ("data", None, None))
-    positions = position_offset + jnp.arange(t)[None, :]
+    offset = jnp.asarray(position_offset)
+    if offset.ndim:  # per-slot lengths: (B,) offsets -> (B, t) positions
+        positions = offset[:, None] + jnp.arange(t)[None, :]
+    else:
+        positions = offset + jnp.arange(t)[None, :]
 
     aux_total = jnp.zeros((), jnp.float32)
 
-    if cache is None:
+    if isinstance(params["layers"], (list, tuple)):
+        # unrolled serving mode: per-layer param dicts (deployed formats whose
+        # weights cannot stack under scan, e.g. block-CSR SLR matrices).
+        x, aux_total, new_cache = _forward_unrolled(
+            params["layers"], x, cfg, positions, cache, collect_kv
+        )
+    elif cache is None:
         def body(carry, lp):
             x, aux = carry
             fn = lambda lp_, x_: _layer_apply(lp_, x_, cfg, positions, None)
@@ -152,9 +162,42 @@ def forward(
 
     x = apply_norm(x, params.get("final_norm"), cfg.norm_type)
     head = params["lm_head"]["w"] if "lm_head" in params else params["embed"]["embedding"].T
-    logits = x @ head
+    logits = apply_weight(x, head)
     logits = constrain(logits, ("data", None, "model"))
     return logits, new_cache, aux_total
+
+
+def _forward_unrolled(layers, x, cfg, positions, cache: LMCache | None, collect_kv: bool):
+    """Python-loop layer stack for deployed formats that cannot scan.
+
+    Semantics match the scan paths exactly: prefill (cache=None) returns
+    stacked (k, v) heads when collect_kv, decode updates layer slices of the
+    full LMCache in place.
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    if cache is None:
+        kvs = []
+        for lp in layers:
+            x, a, kv = _layer_apply(lp, x, cfg, positions, None)
+            aux_total = aux_total + a
+            if collect_kv:
+                kvs.append(kv)
+        if collect_kv:
+            new_cache = (
+                jnp.stack([k for k, _ in kvs]), jnp.stack([v for _, v in kvs])
+            )
+        else:
+            new_cache = None
+        return x, aux_total, new_cache
+    t = x.shape[1]
+    k_full, v_full = cache.k, cache.v
+    for l_idx, lp in enumerate(layers):
+        layer_cache = KVCache(k_full[l_idx], v_full[l_idx], cache.length)
+        x, a, kv = _layer_apply(lp, x, cfg, positions, layer_cache)
+        aux_total = aux_total + a
+        k_full = k_full.at[l_idx].set(kv.k)
+        v_full = v_full.at[l_idx].set(kv.v)
+    return x, aux_total, LMCache(k_full, v_full, cache.length + t)
 
 
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> LMCache:

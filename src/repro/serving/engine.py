@@ -1,22 +1,41 @@
-"""Batched serving engine: continuous-batching-lite over prefill/decode steps.
+"""Batched serving engine: continuous batching over two jitted programs.
 
-Slot-based scheduler: a fixed decode batch of ``max_slots`` sequences; new
-requests prefill into free slots (padded to the slot's cache), finished
-sequences free their slot. All device work goes through exactly two jitted
-programs (prefill_step, decode_step) so serving never recompiles — the same
-programs the dry-run lowers for the decode_32k / prefill_32k cells.
+Slot-based scheduler: a fixed decode batch of ``max_slots`` sequences sharing
+one KV cache whose ``length`` is a per-slot ``(max_slots,)`` vector. New
+requests are admitted in groups, padded to a length bucket, and run through
+the REAL batched ``model.prefill`` program; their KV rows and logits-derived
+first tokens are scattered into free slots inside the same jitted call.
+Decode then issues exactly ONE jitted step per engine tick covering all
+active slots: sampling happens on device and a single ``(max_slots,)`` token
+array is fetched per step — no per-slot Python loop, no per-slot cache
+slicing/write-back, no per-slot host sync.
+
+Device programs (all shapes static, so serving never recompiles):
+  * ``prefill[bucket]`` — (params, tokens (S, bucket), lengths, slot_ids,
+    cache, step) -> (first_tokens (S,), cache); one variant per length bucket
+  * ``decode`` — (params, tokens (S, 1), cache, active (S,), step)
+    -> (next_tokens (S,), cache)
+
+Weights may be a raw param tree (dense) or a ``DeployedModel`` serving
+SLR (L + S) weights in factored / block-CSR form — the programs are format-
+agnostic because every linear site goes through ``models.layers.apply_weight``.
+
+``ReferenceEngine`` preserves the seed per-slot/per-token path: it is the
+baseline that ``benchmarks/serve_throughput.py`` measures against, and the
+fallback for cache families without per-slot lengths (ssm/hybrid/encdec).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..models import model as model_lib
+
+BATCHED_FAMILIES = ("dense", "moe", "vlm")  # cache families with per-slot lengths
 
 
 @dataclass
@@ -35,33 +54,215 @@ class EngineConfig:
     max_slots: int = 4        # concurrent sequences (decode batch)
     max_len: int = 256        # cache capacity per slot
     greedy: bool = True
+    temperature: float = 1.0  # used when greedy=False (on-device sampling)
     eos_token: int | None = None
+    seed: int = 0
+    min_bucket: int = 8       # smallest prefill length bucket
+
+
+def _as_params(params_or_deployed):
+    """Accept a raw param tree or a serving.deployed.DeployedModel."""
+    return getattr(params_or_deployed, "params", None) \
+        if hasattr(params_or_deployed, "fmt") else params_or_deployed
 
 
 class ServingEngine:
-    """Single-host reference engine; the multi-pod path swaps the jitted fns
+    """Single-host batched engine; the multi-pod path swaps the jitted fns
     for their pjit'd versions (same signatures — see launch/serve.py)."""
+
+    def __init__(self, arch_cfg, params, ecfg: EngineConfig = EngineConfig()):
+        if arch_cfg.family not in BATCHED_FAMILIES:
+            raise ValueError(
+                f"batched engine needs a KV-cache family, got {arch_cfg.family!r};"
+                " use ReferenceEngine for ssm/hybrid/encdec"
+            )
+        self.cfg = arch_cfg
+        self.ecfg = ecfg
+        deployed = _as_params(params)
+        self.params = deployed if deployed is not None else params
+        self._queue: list[Request] = []
+        self._active: dict[int, Request] = {}   # slot -> request
+        self._uid = 0
+        self._last_token = np.zeros(ecfg.max_slots, np.int64)
+
+        # one shared cache; per-slot valid-prefix lengths ride inside it
+        cache = model_lib.init_cache(
+            arch_cfg, ecfg.max_slots, ecfg.max_len, dtype=jnp.float32
+        )
+        self.cache = cache._replace(
+            length=jnp.zeros((ecfg.max_slots,), jnp.int32)
+        )
+        self._base_key = jax.random.PRNGKey(ecfg.seed)
+
+        # instrumentation: device calls vs (re)traces — tests assert the
+        # decode loop is one device call per step and compiles exactly once
+        self.decode_calls = 0
+        self.decode_traces = 0
+        self.prefill_calls = 0
+        self.prefill_traces = 0
+
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
+        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(4,))
+
+    # ------------------------------------------------------------ intake ---
+
+    def submit(self, prompt: list[int], max_new_tokens: int = 16) -> int:
+        assert len(prompt) >= 1, "empty prompt"
+        assert len(prompt) + max_new_tokens <= self.ecfg.max_len, (
+            f"prompt({len(prompt)}) + max_new({max_new_tokens}) exceeds "
+            f"cache capacity {self.ecfg.max_len}"
+        )
+        self._uid += 1
+        self._queue.append(
+            Request(self._uid, list(prompt), max_new_tokens, submitted_at=time.time())
+        )
+        return self._uid
+
+    # ----------------------------------------------------- device programs ---
+
+    def _sample(self, logits: jax.Array, step: jax.Array, salt: int) -> jax.Array:
+        """Greedy or temperature sampling, on device. logits: (S, vocab).
+
+        ``salt`` separates the prefill and decode streams — both can sample
+        within the same engine tick and must not share gumbel noise.
+        """
+        if self.ecfg.greedy or self.ecfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        key = jax.random.fold_in(jax.random.fold_in(self._base_key, step), salt)
+        g = jax.random.gumbel(key, logits.shape)
+        return jnp.argmax(logits / self.ecfg.temperature + g, axis=-1).astype(jnp.int32)
+
+    def _decode_fn(self, params, tokens, cache, active, step):
+        self.decode_traces += 1  # python side effect: counts traces only
+        logits, new_cache = model_lib.decode_step(params, tokens, cache, self.cfg)
+        # only active slots advance their valid prefix; inactive slots wrote a
+        # junk row at their frozen position — the next real token overwrites it
+        new_len = jnp.where(active, new_cache.length, cache.length)
+        next_tok = self._sample(logits[:, -1], step, salt=0)
+        return next_tok, new_cache._replace(length=new_len)
+
+    def _prefill_fn(self, params, tokens, lengths, slot_ids, cache, step):
+        self.prefill_traces += 1
+        logits, pcache = model_lib.prefill(
+            params, {"tokens": tokens}, self.cfg, max_len=self.ecfg.max_len,
+            cache_dtype=cache.k.dtype,
+        )
+        # scatter the prefilled KV rows / lengths into the target slots;
+        # padded rows carry slot_id == max_slots and drop out of bounds
+        k = cache.k.at[:, slot_ids].set(pcache.k, mode="drop")
+        v = cache.v.at[:, slot_ids].set(pcache.v, mode="drop")
+        new_len = cache.length.at[slot_ids].set(lengths, mode="drop")
+        # the logits at the last prompt position yield the first generated token
+        last = jnp.take_along_axis(logits, (lengths - 1)[:, None, None], axis=1)
+        first_tok = self._sample(last[:, 0], step, salt=1)
+        return first_tok, cache._replace(k=k, v=v, length=new_len)
+
+    # ------------------------------------------------------------- steps ---
+
+    def _bucket(self, n: int) -> int:
+        b = self.ecfg.min_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.ecfg.max_len)
+
+    def _admit(self, free: list[int], done: list[Request], step: int):
+        """Batch all admissible queued requests through one prefill call."""
+        take = min(len(free), len(self._queue))
+        if not take:
+            return
+        reqs = [self._queue.pop(0) for _ in range(take)]
+        s = self.ecfg.max_slots
+        bucket = self._bucket(max(len(r.prompt) for r in reqs))
+        tokens = np.zeros((s, bucket), np.int32)
+        lengths = np.ones((s,), np.int32)        # padded rows: 1 valid token
+        slot_ids = np.full((s,), s, np.int32)    # out-of-range => dropped
+        slots = []
+        for i, req in enumerate(reqs):
+            slot = free.pop()
+            slots.append(slot)
+            self._active[slot] = req
+            tokens[i, : len(req.prompt)] = req.prompt
+            lengths[i] = len(req.prompt)
+            slot_ids[i] = slot
+        first, self.cache = self._prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(slot_ids), self.cache, jnp.asarray(step, jnp.int32),
+        )
+        self.prefill_calls += 1
+        firsts = np.asarray(first)               # one fetch per admit batch
+        for i, (slot, req) in enumerate(zip(slots, reqs)):
+            self._record(slot, req, int(firsts[i]), free, done)
+
+    def _record(self, slot: int, req: Request, tok: int, free, done):
+        req.out_tokens.append(tok)
+        self._last_token[slot] = tok
+        if len(req.out_tokens) >= req.max_new_tokens or (
+            self.ecfg.eos_token is not None and tok == self.ecfg.eos_token
+        ):
+            req.done = True
+            req.finished_at = time.time()
+            done.append(req)
+            del self._active[slot]
+            free.append(slot)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        """Drive everything to completion (batch mode)."""
+        done: list[Request] = []
+        s = self.ecfg.max_slots
+        free = [x for x in range(s) if x not in self._active]
+        steps = 0
+        while (self._queue or self._active) and steps < max_steps:
+            steps += 1
+            self._admit(free, done, steps)
+            if not self._active:
+                continue
+            active = np.zeros((s,), bool)
+            tokens = np.zeros((s, 1), np.int32)
+            for slot in self._active:
+                active[slot] = True
+                tokens[slot, 0] = self._last_token[slot]
+            nxt, self.cache = self._decode(
+                self.params, jnp.asarray(tokens), self.cache,
+                jnp.asarray(active), jnp.asarray(steps, jnp.int32),
+            )
+            self.decode_calls += 1
+            toks = np.asarray(nxt)               # ONE host sync per step
+            for slot, req in list(self._active.items()):
+                self._record(slot, req, int(toks[slot]), free, done)
+        return done
+
+
+class ReferenceEngine:
+    """The seed per-slot, per-token engine (scalar-length cache, slot slicing
+    with host write-back, one ``int()`` sync per slot per token).
+
+    Kept as (a) the measured baseline for ``benchmarks/serve_throughput.py``
+    and (b) the serving path for cache families without per-slot lengths.
+    """
 
     def __init__(self, arch_cfg, params, ecfg: EngineConfig = EngineConfig()):
         self.cfg = arch_cfg
         self.ecfg = ecfg
-        self.params = params
+        deployed = _as_params(params)
+        self.params = deployed if deployed is not None else params
         self._queue: list[Request] = []
         self._active: dict[int, Request] = {}   # slot -> request
         self._uid = 0
 
-        # one cache for the whole slot batch
         self.cache = model_lib.init_cache(
             arch_cfg, ecfg.max_slots, ecfg.max_len, dtype=jnp.float32
         )
         self._decode = jax.jit(
             lambda p, tok, cache: model_lib.decode_step(p, tok, cache, arch_cfg)
         )
-        self._token_buf = np.zeros((ecfg.max_slots, 1), np.int32)
 
     # ------------------------------------------------------------ intake ---
 
     def submit(self, prompt: list[int], max_new_tokens: int = 16) -> int:
+        assert len(prompt) + max_new_tokens <= self.ecfg.max_len, (
+            f"prompt({len(prompt)}) + max_new({max_new_tokens}) exceeds "
+            f"cache capacity {self.ecfg.max_len}"
+        )
         self._uid += 1
         self._queue.append(
             Request(self._uid, list(prompt), max_new_tokens, submitted_at=time.time())
@@ -71,23 +272,13 @@ class ServingEngine:
     # ------------------------------------------------------------- steps ---
 
     def _prefill_into_slot(self, slot: int, req: Request):
-        """Run the prompt through decode steps into this slot's cache rows.
-
-        Reference implementation uses per-token insertion (slot-local prefill
-        with a shared cache requires per-slot lengths; the production path
-        batches same-length prompts through the prefill program). Correctness
-        is what matters here — tests compare against full-forward logits.
-        """
-        # stale cache rows beyond _slot_len are masked by the decode attention,
-        # so resetting the per-slot length is sufficient. The LAST prompt
-        # token is fed by the first decode step (whose logits produce the
-        # first generated token), so prefill stops one short.
+        """Per-token insertion into this slot's cache rows (the LAST prompt
+        token is fed by the first decode step, so prefill stops one short)."""
         self._slot_len[slot] = 0
         for tok in req.prompt[:-1]:
             self._step_slot(slot, tok)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
-        """Drive everything to completion (batch mode)."""
         self._slot_len = getattr(self, "_slot_len", [0] * self.ecfg.max_slots)
         done: list[Request] = []
         free = [s for s in range(self.ecfg.max_slots) if s not in self._active]
@@ -99,7 +290,6 @@ class ServingEngine:
                 req = self._queue.pop(0)
                 self._active[slot] = req
                 self._prefill_into_slot(slot, req)
-            # batched decode step over active slots
             if not self._active:
                 continue
             for slot, req in list(self._active.items()):
@@ -118,7 +308,7 @@ class ServingEngine:
         return done
 
     def _step_slot(self, slot: int, token: int) -> int:
-        """One decode step for one slot (reference path: per-slot cache view)."""
+        """One decode step for one slot (per-slot cache view + write-back)."""
         sub_cache = jax.tree.map(
             lambda x: x[:, slot : slot + 1] if x.ndim >= 2 and x.shape[1] == self.ecfg.max_slots else x,
             self.cache,

@@ -28,16 +28,26 @@ from ..kernels.bsr_matmul import BsrMatrix, bsr_from_dense
 
 @dataclass
 class SLRLinear:
-    """One deployed SLR weight."""
+    """One deployed SLR weight.
+
+    Registered as a jax pytree so it can live *inside* a model parameter tree
+    and flow through jit / scan: ``models.layers.apply_weight`` dispatches to
+    ``apply`` wherever a dense weight is expected. Stacked blocks (leading
+    layer axis on p/vt/s_coo) slice correctly under ``lax.scan``. ``use_kernel``
+    is static metadata choosing the Pallas hot path at trace time.
+    """
 
     p: jax.Array | None          # (n, r_live)
     vt: jax.Array | None         # (r_live, m)
     s_coo: sparse.CooMatrix | None
     s_bsr: BsrMatrix | None
     shape: tuple[int, int]
+    use_kernel: bool = False     # static: route apply() through Pallas kernels
 
-    def apply(self, x: jax.Array, kernel: bool = False) -> jax.Array:
+    def apply(self, x: jax.Array, kernel: bool | None = None) -> jax.Array:
         """y = x @ (L + S)."""
+        if kernel is None:
+            kernel = self.use_kernel
         y = 0.0
         if self.p is not None:
             if kernel:
@@ -58,6 +68,22 @@ class SLRLinear:
         return y
 
     @property
+    def dtype(self):
+        for part in (self.p, self.s_coo and self.s_coo.values, self.s_bsr and self.s_bsr.vals):
+            if part is not None:
+                return part.dtype
+        return jnp.float32
+
+    @property
+    def ndim(self) -> int:
+        """Logical ndim of the dense weight this object replaces (stack-aware)."""
+        if self.p is not None:
+            return self.p.ndim
+        if self.s_coo is not None:
+            return self.s_coo.values.ndim + 1
+        return 2  # only s_bsr left, and block-CSR is per-matrix by construction
+
+    @property
     def param_bytes(self) -> int:
         total = 0
         if self.p is not None:
@@ -70,6 +96,30 @@ class SLRLinear:
             nnz = int(np.sum(np.asarray(self.s_coo.idx) >= 0))
             total += nnz * (self.s_coo.values.dtype.itemsize + 4)
         return total
+
+
+# `shape`/`use_kernel` are static metadata; everything else traces through jit.
+jax.tree_util.register_dataclass(
+    SLRLinear,
+    data_fields=["p", "vt", "s_coo", "s_bsr"],
+    meta_fields=["shape", "use_kernel"],
+)
+
+
+def coo_to_bsr(s_coo: sparse.CooMatrix, bsr_block: int) -> BsrMatrix | None:
+    """Dense-ify an unstacked COO matrix and re-tile as block-CSR.
+
+    The block size halves until it divides both dims (floor 8); returns None
+    for ragged shapes no block size fits — callers stay on the COO/XLA path.
+    """
+    dense_s = np.asarray(sparse.to_dense(s_coo), np.float32)
+    n, m = dense_s.shape
+    bs = bsr_block
+    while (n % bs or m % bs) and bs > 8:
+        bs //= 2
+    if n % bs or m % bs:
+        return None
+    return bsr_from_dense(dense_s, bs)
 
 
 def _live_rank_slice(blk, info: BlockInfo):
@@ -99,12 +149,7 @@ def build_slr_linears(
         blk = state[info.name]
         p, vt = _live_rank_slice(blk, info)
         if fmt == "bsr" and not info.stack_dims:
-            dense_s = np.asarray(sparse.to_dense(blk.s_coo), np.float32)
-            n, m = dense_s.shape
-            bs = bsr_block
-            while (n % bs or m % bs) and bs > 8:
-                bs //= 2
-            s_bsr = bsr_from_dense(dense_s, bs) if n % bs == 0 and m % bs == 0 else None
+            s_bsr = coo_to_bsr(blk.s_coo, bsr_block)
             # keep the COO view too: apply(kernel=False) is the XLA/GSPMD
             # fallback and must include the sparse part
             out[info.name] = SLRLinear(

@@ -1,0 +1,83 @@
+"""Minimal stand-in for the ``hypothesis`` API surface the test suite uses.
+
+The tier-1 suite must run green on a bare container (no pip installs), so the
+property tests fall back to this shim when ``hypothesis`` is absent:
+
+  * ``strategies.floats(lo, hi)`` / ``strategies.integers(lo, hi)`` — bounded
+    samplers that always include both endpoints;
+  * ``given(*strategies)`` — runs the test body over a deterministic grid of
+    examples (endpoints first, then seeded uniform draws);
+  * ``settings(...)`` — honours ``max_examples``, ignores the rest.
+
+With real hypothesis installed (see requirements-dev.txt) the tests import it
+instead and get full shrinking/fuzzing behaviour.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SETTINGS_ATTR = "_shim_max_examples"
+
+
+class _Strategy:
+    def __init__(self, lo, hi, cast):
+        self.lo, self.hi, self.cast = lo, hi, cast
+
+    def examples(self, n: int, rng: np.random.RandomState):
+        out = [self.cast(self.lo), self.cast(self.hi)]
+        while len(out) < n:
+            out.append(self.cast(self.lo + (self.hi - self.lo) * rng.random_sample()))
+        return out[:n]
+
+
+class strategies:  # noqa: N801 — mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(float(min_value), float(max_value), float)
+
+    @staticmethod
+    def integers(min_value=0, max_value=1, **_kw):
+        return _Strategy(int(min_value), int(max_value), lambda v: int(round(v)))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
+    def deco(fn):
+        setattr(fn, _SETTINGS_ATTR, max_examples)
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, _SETTINGS_ATTR, _DEFAULT_MAX_EXAMPLES)
+            # cap the grid: endpoints cross-product would explode for many args
+            rng = np.random.RandomState(0)
+            columns = [s.examples(n, rng) for s in strats]
+            corner = list(itertools.islice(
+                itertools.product(*[(s.cast(s.lo), s.cast(s.hi)) for s in strats]), n
+            ))
+            rows = corner + list(zip(*columns))
+            seen = set()
+            for row in rows[:max(n, len(corner))]:
+                if row in seen:
+                    continue
+                seen.add(row)
+                fn(*args, *row, **kwargs)
+
+        # pytest must not see the strategy-filled parameters as fixtures:
+        # expose a signature with only the leading (non-strategy) params.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())[: -len(strats)] if strats else []
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

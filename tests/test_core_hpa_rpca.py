@@ -3,8 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # bare container: deterministic fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import sparse
 from repro.core.admm import SalaadConfig, admm_update, init_slr_state

@@ -4,8 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # bare container: deterministic fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.kernels.ref import attention_ref
 from repro.models.attention import blockwise_attention
