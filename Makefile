@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench serve-demo
+.PHONY: test bench-smoke bench bench-latency serve-demo
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -10,6 +10,10 @@ test:
 # quick serving-throughput benchmark (interpret-mode kernels on CPU)
 bench-smoke:
 	$(PYTHON) -m benchmarks.serve_throughput --quick
+
+# latency SLO harness: paged vs slot-padded engine under Poisson arrivals
+bench-latency:
+	$(PYTHON) -m benchmarks.serve_latency --quick
 
 # full scaled-down paper benchmark suite
 bench:

@@ -1,0 +1,184 @@
+"""Latency SLO harness: Poisson arrivals against paged vs slot-padded engines.
+
+Throughput (serve_throughput.py) hides the queueing story: the slot-padded
+engine reserves ``max_len`` KV positions per slot, so at a fixed memory
+budget it can only decode ``max_slots`` requests at once and everything else
+waits. The paged engine spends the SAME KV budget as a shared page pool, so
+short requests stop paying for the worst case and more of them decode
+concurrently — queue waits (and therefore tail TTFT) drop.
+
+This harness drives both engines with the SAME Poisson request trace in open
+loop (arrivals are submitted on the wall clock, whether or not the engine is
+keeping up), then reports per-engine p50/p99 time-to-first-token, inter-token
+latency, admitted-request rate, and SLO attainment → ``BENCH_latency.json``.
+
+  PYTHONPATH=src python -m benchmarks.serve_latency --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.models import model as model_lib
+from repro.serving.engine import EngineConfig, PagedServingEngine, ServingEngine
+
+from .common import emit
+
+
+def build_trace(n: int, rate_hz: float, vocab: int, max_new: int, seed: int):
+    """Poisson arrival trace: [(arrival_offset_s, prompt, max_new), ...]."""
+    rng = np.random.RandomState(seed)
+    offsets = np.cumsum(rng.exponential(1.0 / rate_hz, size=n))
+    return [
+        (float(offsets[i]),
+         rng.randint(0, vocab, size=rng.randint(4, 8)).tolist(),
+         max_new)
+        for i in range(n)
+    ]
+
+
+def percentile(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if len(xs) else float("nan")
+
+
+def drive_open_loop(engine, trace, slo_ms: float) -> dict:
+    """Submit the trace on the wall clock; tick the engine whenever it has
+    work; measure TTFT against each request's SCHEDULED arrival time."""
+    scheduled: dict[int, float] = {}
+    done = []
+    i = 0
+    t0 = time.time()
+    while i < len(trace) or engine.has_work:
+        now = time.time() - t0
+        while i < len(trace) and trace[i][0] <= now:
+            off, prompt, max_new = trace[i]
+            uid = engine.submit(prompt, max_new_tokens=max_new,
+                                deadline=t0 + off + slo_ms / 1e3)
+            scheduled[uid] = t0 + off
+            i += 1
+        if engine.has_work:
+            done.extend(engine.step())
+        elif i < len(trace):
+            time.sleep(max(trace[i][0] - (time.time() - t0), 0.0))
+    dt = time.time() - t0
+
+    ttft = [r.first_token_at - scheduled[r.uid] for r in done]
+    itl = [b - a for r in done for a, b in zip(r.token_times, r.token_times[1:])]
+    tokens = sum(len(r.out_tokens) for r in done)
+    return {
+        "requests": len(done),
+        "tokens": tokens,
+        "wall_s": round(dt, 3),
+        "admitted_req_per_s": round(len(done) / max(dt, 1e-9), 3),
+        "tok_per_s": round(tokens / max(dt, 1e-9), 1),
+        "ttft_p50_ms": round(percentile(ttft, 50) * 1e3, 1),
+        "ttft_p99_ms": round(percentile(ttft, 99) * 1e3, 1),
+        "itl_mean_ms": round(float(np.mean(itl)) * 1e3, 1) if itl else None,
+        "itl_p99_ms": round(percentile(itl, 99) * 1e3, 1) if itl else None,
+        "slo_ms": slo_ms,
+        "slo_attainment": round(
+            sum(t * 1e3 <= slo_ms for t in ttft) / max(len(ttft), 1), 3
+        ),
+        "evictions": getattr(engine, "evictions", 0),
+    }
+
+
+def warmup(engine, vocab: int, max_new: int):
+    """Absorb prefill-bucket + decode compilation outside the measured window."""
+    engine.submit([1, 2, 3, 4, 5], max_new_tokens=max_new)
+    engine.submit([6, 7], max_new_tokens=max_new)
+    engine.run()
+
+
+def run(
+    requests: int = 32,
+    rate_hz: float = 400.0,
+    max_new: int = 16,
+    padded_slots: int = 4,
+    max_len: int = 64,
+    block_size: int = 8,
+    paged_slots: int = 10,
+    slo_ms: float = 2000.0,
+    kv_dtype: str = "float32",
+    seed: int = 0,
+) -> dict:
+    """Both engines get the SAME KV memory budget (padded_slots * max_len
+    tokens) and the SAME arrival trace; the paged engine turns that budget
+    into a page pool shared by more decode slots."""
+    cfg = get_arch("salaad_llama_60m").reduced()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(seed))
+    trace = build_trace(requests, rate_hz, cfg.vocab_size, max_new, seed)
+    num_blocks = padded_slots * max_len // block_size
+
+    engines = {
+        "padded_slots": ServingEngine(
+            cfg, params,
+            EngineConfig(max_slots=padded_slots, max_len=max_len),
+        ),
+        "paged": PagedServingEngine(
+            cfg, params,
+            EngineConfig(
+                max_slots=paged_slots, max_len=max_len,
+                block_size=block_size, num_blocks=num_blocks,
+                kv_dtype=kv_dtype,
+            ),
+        ),
+    }
+    rows = {}
+    for name, eng in engines.items():
+        warmup(eng, cfg.vocab_size, max_new)
+        rows[name] = drive_open_loop(eng, trace, slo_ms)
+        rows[name]["engine"] = name
+        rows[name]["kv_budget_tokens"] = padded_slots * max_len
+        rows[name]["decode_slots"] = eng.ecfg.max_slots
+
+    pad, pg = rows["padded_slots"], rows["paged"]
+    rows["summary"] = {
+        "equal_kv_budget_tokens": padded_slots * max_len,
+        "ttft_p99_speedup": round(
+            pad["ttft_p99_ms"] / max(pg["ttft_p99_ms"], 1e-9), 2
+        ),
+        "ttft_p50_speedup": round(
+            pad["ttft_p50_ms"] / max(pg["ttft_p50_ms"], 1e-9), 2
+        ),
+        "admitted_rate_ratio": round(
+            pg["admitted_req_per_s"] / max(pad["admitted_req_per_s"], 1e-9), 2
+        ),
+        "slo_attainment_padded": pad["slo_attainment"],
+        "slo_attainment_paged": pg["slo_attainment"],
+    }
+    return rows
+
+
+def main(out: str = "BENCH_latency.json", **kw):
+    rows = run(**kw)
+    Path(out).write_text(json.dumps(rows, indent=2))
+    s = rows["summary"]
+    emit(
+        "serve_latency", 0.0,
+        f"p99_ttft padded={rows['padded_slots']['ttft_p99_ms']}ms "
+        f"paged={rows['paged']['ttft_p99_ms']}ms "
+        f"(x{s['ttft_p99_speedup']}); slo {s['slo_attainment_padded']} -> "
+        f"{s['slo_attainment_paged']}",
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate-hz", type=float, default=400.0)
+    ap.add_argument("--slo-ms", type=float, default=2000.0)
+    ap.add_argument("--kv-dtype", default="float32")
+    ap.add_argument("--out", default="BENCH_latency.json")
+    a = ap.parse_args()
+    n = a.requests or (24 if a.quick else 32)
+    main(out=a.out, requests=n, rate_hz=a.rate_hz, slo_ms=a.slo_ms,
+         kv_dtype=a.kv_dtype)

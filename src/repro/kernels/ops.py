@@ -16,6 +16,7 @@ from . import ref
 from .bsr_matmul import BsrMatrix, bsr_from_dense, bsr_matmul_pallas, bsr_to_dense
 from .flash_attention import flash_attention_pallas
 from .lowrank_matmul import lowrank_matmul_pallas
+from .paged_attention import paged_attention_pallas
 from .soft_threshold import soft_threshold_pallas
 
 __all__ = [
@@ -26,6 +27,7 @@ __all__ = [
     "lowrank_matmul",
     "bsr_matmul",
     "flash_attention",
+    "paged_attention",
     "bsr_occupancy",
 ]
 
@@ -57,6 +59,14 @@ def flash_attention(q, k, v, causal=True, interpret: bool | None = None, **kw):
     return flash_attention_pallas(
         q, k, v, causal=causal,
         interpret=_auto_interpret() if interpret is None else interpret, **kw
+    )
+
+
+def paged_attention(q, k_pages, v_pages, block_table, lengths,
+                    interpret: bool | None = None):
+    return paged_attention_pallas(
+        q, k_pages, v_pages, block_table, lengths,
+        interpret=_auto_interpret() if interpret is None else interpret,
     )
 
 

@@ -23,6 +23,39 @@ def bsr_matmul_ref(x: jax.Array, bsr) -> jax.Array:
     return (x.astype(jnp.float32) @ dense.astype(jnp.float32)).astype(x.dtype)
 
 
+def paged_attention_ref(
+    q: jax.Array,            # (B, Hq, D) single decode query per slot
+    k_pages: jax.Array,      # (num_pages, Hkv, bs, D) page pool
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (B, pages_per_slot) int32; >= num_pages unmapped
+    lengths: jax.Array,      # (B,) pre-insert valid length per slot
+) -> jax.Array:
+    """Gather pages via the block table, then masked decode softmax.
+
+    The query at slot b sits at position ``lengths[b]`` (its KV is already in
+    the pool), so keys at positions <= lengths[b] are visible.
+    """
+    n, hkv, bs, d = k_pages.shape
+    b, hq, _ = q.shape
+    group = hq // hkv
+    bt = jnp.minimum(block_table, n - 1)     # clamp unmapped; mask hides it
+    nb = bt.shape[1]
+
+    def gather(pages):
+        g = pages[bt]                        # (B, nb, Hkv, bs, D)
+        return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, nb * bs, d)
+
+    k, v = gather(k_pages), gather(v_pages)
+    scale = 1.0 / np.sqrt(d)
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32) * scale
+    sc = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(nb * bs)[None, :] <= lengths[:, None]      # (B, S)
+    sc = jnp.where(mask[:, None, None], sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
 def attention_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True, scale=None
 ) -> jax.Array:

@@ -1,9 +1,12 @@
 """Serving launcher: load a checkpoint (or fresh init), deploy the SLR model
 across one or more HPA budgets, and serve batched requests through the
 SLR-native engine — the elastic-deployment spectrum through the fast path.
+Default engine is the block-paged continuously-batched one; size its KV pool
+with --block-size/--num-blocks and (optionally) quantize it with --kv-dtype.
 
   python -m repro.launch.serve --arch salaad_llama_60m --reduced \
-      --keep-ratios 1.0,0.6,0.3 --fmt factored --kappa 0.7 --requests 8
+      --keep-ratios 1.0,0.6,0.3 --fmt factored --kappa 0.7 --requests 8 \
+      --block-size 16 --slo-ms 2000
 """
 from __future__ import annotations
 
@@ -23,27 +26,51 @@ from repro.serving.deployed import DeployedModel
 from repro.serving.engine import (
     BATCHED_FAMILIES,
     EngineConfig,
+    PagedServingEngine,
     ReferenceEngine,
     ServingEngine,
 )
 from repro.serving.slr_params import deployment_report
 
+ENGINES = {
+    "paged": PagedServingEngine,
+    "batched": ServingEngine,
+    "reference": ReferenceEngine,
+}
 
-def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int) -> dict:
+
+def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
+                slo_ms: float | None = None) -> dict:
     rng = np.random.RandomState(seed)
+    submitted = time.time()
     for _ in range(requests):
         prompt = rng.randint(0, vocab, size=rng.randint(2, 8)).tolist()
-        engine.submit(prompt, max_new_tokens=max_new)
+        engine.submit(
+            prompt, max_new_tokens=max_new,
+            deadline=None if slo_ms is None else submitted + slo_ms / 1e3,
+        )
     t0 = time.time()
     done = engine.run()
     dt = time.time() - t0
     total_tokens = sum(len(r.out_tokens) for r in done)
-    return {
+    stats = {
         "requests": len(done),
         "tokens": total_tokens,
         "tok_per_s": round(total_tokens / max(dt, 1e-9), 2),
         "sample": done[0].out_tokens if done else [],
     }
+    ttft = [r.first_token_at - t0 for r in done if r.first_token_at]
+    if ttft:
+        stats["ttft_p50_ms"] = round(float(np.percentile(ttft, 50)) * 1e3, 1)
+        stats["ttft_p99_ms"] = round(float(np.percentile(ttft, 99)) * 1e3, 1)
+    if slo_ms is not None and ttft:
+        stats["slo_ms"] = slo_ms
+        stats["slo_attainment"] = round(
+            sum(t * 1e3 <= slo_ms for t in ttft) / len(ttft), 3
+        )
+    if hasattr(engine, "evictions"):
+        stats["evictions"] = engine.evictions
+    return stats
 
 
 def main():
@@ -56,12 +83,21 @@ def main():
         help="comma-separated HPA budgets, e.g. 1.0,0.6,0.3 (omit: serve dense init)",
     )
     ap.add_argument("--fmt", default="factored", choices=("dense", "factored", "bsr"))
-    ap.add_argument("--engine", default="batched", choices=("batched", "reference"))
+    ap.add_argument("--engine", default="paged", choices=tuple(ENGINES))
     ap.add_argument("--kappa", type=float, default=0.7)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV page size in tokens (paged engine)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV page pool size; None = max_slots * max_len worth")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="TTFT SLO; reports attainment and sets request deadlines")
+    ap.add_argument("--kv-dtype", default="float32",
+                    choices=("float32", "bfloat16", "int8"),
+                    help="KV storage dtype; int8 stores quantized pages (paged)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -83,18 +119,22 @@ def main():
     else:
         slr, blocks = init_slr_state(params, scfg)
 
-    engine_cls = ServingEngine if args.engine == "batched" else ReferenceEngine
-    if engine_cls is ServingEngine and cfg.family not in BATCHED_FAMILIES:
+    engine_cls = ENGINES[args.engine]
+    if engine_cls is not ReferenceEngine and cfg.family not in BATCHED_FAMILIES:
         print(json.dumps({"note": f"family {cfg.family!r} has no per-slot-length "
                           "cache yet; falling back to the reference engine"}))
         engine_cls = ReferenceEngine
-    ecfg = EngineConfig(max_slots=args.max_slots, max_len=args.max_len)
+    ecfg = EngineConfig(
+        max_slots=args.max_slots, max_len=args.max_len,
+        block_size=args.block_size, num_blocks=args.num_blocks,
+        kv_dtype=args.kv_dtype,
+    )
 
     if args.keep_ratios is None:
         engine = engine_cls(cfg, params, ecfg)
         print(json.dumps({"budget": None, "fmt": "dense-init",
                           **serve_batch(engine, cfg.vocab_size, args.requests,
-                                        args.max_new, args.seed)}))
+                                        args.max_new, args.seed, args.slo_ms)}))
         return
 
     # one SALAAD state, a spectrum of served capacities — each budget deploys
@@ -103,7 +143,8 @@ def main():
         slr_c, report = hpa_keep_ratio(slr, blocks, keep, args.kappa)
         deployed = DeployedModel.build(cfg, params, slr_c, blocks, fmt=args.fmt)
         engine = engine_cls(cfg, deployed, ecfg)
-        stats = serve_batch(engine, cfg.vocab_size, args.requests, args.max_new, args.seed)
+        stats = serve_batch(engine, cfg.vocab_size, args.requests, args.max_new,
+                            args.seed, args.slo_ms)
         dep = deployment_report(params, slr_c, blocks)
         print(json.dumps({
             "budget": keep,

@@ -29,6 +29,75 @@ class KVCache(NamedTuple):
     length: jax.Array  # () int32 valid prefix — or (B,) for per-slot lengths
 
 
+class PagedLayerCache(NamedTuple):
+    """One layer's view of a block-paged KV cache (serving decode path).
+
+    Token position j of slot b lives in page ``block_table[b, j // bs]`` at
+    offset ``j % bs``. Entries ``>= num_pages`` mean "unmapped" — writes to
+    them drop, gathers clamp (and the length mask hides whatever they read).
+    When ``k_scale``/``v_scale`` are present the payload pools are int8 and
+    dequantize per-(position, head) — serving/kv_quant.py layout.
+    """
+
+    k: jax.Array            # (num_pages, Hkv, block_size, D) page pool
+    v: jax.Array
+    block_table: jax.Array  # (B, pages_per_slot) int32
+    length: jax.Array       # (B,) int32 valid tokens per slot
+    k_scale: jax.Array | None = None  # (num_pages, Hkv, block_size, 1) f32
+    v_scale: jax.Array | None = None
+
+
+def paged_insert(cache: PagedLayerCache, kh: jax.Array, vh: jax.Array) -> PagedLayerCache:
+    """Insert one decode token (B, Hkv, 1, D) at each slot's ``length``.
+
+    Unmapped pages (freed slots) drop the write; per-slot page sets are
+    disjoint by allocator invariant, so the scatter has no collisions.
+    """
+    bs = cache.k.shape[2]
+    pos = cache.length
+    blk = jnp.clip(pos // bs, 0, cache.block_table.shape[1] - 1)
+    page = jnp.take_along_axis(cache.block_table, blk[:, None], axis=1)[:, 0]
+    off = pos % bs
+    k_tok, v_tok = kh[:, :, 0], vh[:, :, 0]       # (B, Hkv, D)
+    if cache.k_scale is not None:
+        from ..serving.kv_quant import quantize_kv
+
+        k_q, k_s = quantize_kv(k_tok)
+        v_q, v_s = quantize_kv(v_tok)
+        return cache._replace(
+            k=cache.k.at[page, :, off, :].set(k_q, mode="drop"),
+            v=cache.v.at[page, :, off, :].set(v_q, mode="drop"),
+            k_scale=cache.k_scale.at[page, :, off, :].set(k_s, mode="drop"),
+            v_scale=cache.v_scale.at[page, :, off, :].set(v_s, mode="drop"),
+            length=cache.length + 1,
+        )
+    return cache._replace(
+        k=cache.k.at[page, :, off, :].set(k_tok.astype(cache.k.dtype), mode="drop"),
+        v=cache.v.at[page, :, off, :].set(v_tok.astype(cache.v.dtype), mode="drop"),
+        length=cache.length + 1,
+    )
+
+
+def paged_gather(cache: PagedLayerCache) -> tuple[jax.Array, jax.Array]:
+    """Materialize each slot's logical KV sequence from its pages.
+
+    Returns (k, v) of shape (B, Hkv, pages_per_slot * block_size, D) laid out
+    so logical position j of the contiguous cache and position j here hold
+    identical values — the decode einsum then matches the unpaged path.
+    """
+    n = cache.k.shape[0]
+    bt = jnp.minimum(cache.block_table, n - 1)    # clamp unmapped; mask hides it
+
+    def gather(pages, scale):
+        g = pages[bt]                             # (B, nb, Hkv, bs, D)
+        if scale is not None:
+            g = g.astype(jnp.float32) * scale[bt]
+        b, nb, h, bs, d = g.shape
+        return g.transpose(0, 2, 1, 3, 4).reshape(b, h, nb * bs, d)
+
+    return gather(cache.k, cache.k_scale), gather(cache.v, cache.v_scale)
+
+
 def init_qkv(key, d_model, n_heads, n_kv, head_dim, dtype, bias=False):
     kq, kk, kv, ko = jax.random.split(key, 4)
     s = 1.0 / np.sqrt(d_model)
@@ -173,7 +242,15 @@ def attention_block(
             k = apply_rope(k, positions, rope_theta)
         kh = k.transpose(0, 2, 1, 3)  # (B, Hkv, T, D)
         vh = v.transpose(0, 2, 1, 3)
-        if cache is not None:
+        if isinstance(cache, PagedLayerCache):
+            if t != 1:
+                raise NotImplementedError(
+                    "paged cache is decode-only; serving prefills with "
+                    "cache=None and scatters whole blocks into the page pool"
+                )
+            new_cache = paged_insert(cache, kh, vh)
+            kh, vh = paged_gather(new_cache)
+        elif cache is not None:
             # insert at cache.length (decode: t == 1; chunked prefill: t == chunk)
             if jnp.ndim(cache.length) == 0:
                 kc = jax.lax.dynamic_update_slice(
@@ -213,6 +290,19 @@ def attention_block(
             out = flash_attention_jax(
                 qh, kh, vh, True, q_block, kv_block, cache.length, "full"
             )
+        elif (
+            isinstance(cache, PagedLayerCache)
+            and kernel_impl == "pallas"
+            and cache.k_scale is None
+        ):
+            # Pallas paged-decode kernel: the page gather happens in the DMA
+            # engine via the scalar-prefetched block table, not a jnp gather
+            from ..kernels.ops import paged_attention
+
+            out = paged_attention(
+                qh[:, :, 0], new_cache.k, new_cache.v,
+                new_cache.block_table, cache.length,
+            )[:, :, None, :]
         else:
             # single-token decode: O(S) masked einsum
             s = kh.shape[2]

@@ -127,6 +127,26 @@ def decode_step(params, token: jax.Array, cache, cfg: ArchConfig):
     return logits, new_cache
 
 
+def init_paged_cache(
+    cfg: ArchConfig,
+    max_slots: int,
+    num_pages: int,
+    block_size: int,
+    pages_per_slot: int,
+    dtype=jnp.bfloat16,
+    quantized: bool = False,
+):
+    """Block-paged serving cache (KV-cache families only)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"paged KV cache needs a KV-cache family, got {cfg.family!r}"
+        )
+    return transformer.init_paged_cache(
+        cfg, max_slots, num_pages, block_size, pages_per_slot,
+        dtype=dtype, quantized=quantized,
+    )
+
+
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     if cfg.family in ("dense", "moe", "vlm"):
         return transformer.init_cache(cfg, batch, max_len, dtype)

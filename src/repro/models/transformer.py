@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..parallel.sharding import constrain
-from .attention import KVCache, attention_block, init_qkv
+from .attention import KVCache, PagedLayerCache, attention_block, init_qkv
 from .layers import apply_mlp, apply_norm, apply_weight, embed, init_embedding, init_mlp, init_norm
 from .moe import init_moe, moe_ffn
 
@@ -24,6 +24,33 @@ class LMCache(NamedTuple):
     k: jax.Array       # (L, B, Hkv, S, D)
     v: jax.Array
     length: jax.Array  # () — or (B,) for per-slot serving lengths
+
+
+class PagedKVCache(NamedTuple):
+    """Block-paged serving cache: a fixed pool of pages per layer plus a
+    per-slot block table. Serving memory is governed by ``num_pages`` (the
+    actual budget), not ``max_slots * max_len`` (the worst case). The block
+    table and lengths are shared across layers; position j of slot b lives in
+    page ``block_table[b, j // block_size]``, offset ``j % block_size``.
+
+    int8 page pools (serving/kv_quant.py) carry per-(position, head) scale
+    pools in ``k_scale``/``v_scale``; None means float payload.
+    """
+
+    k: jax.Array            # (L, num_pages, Hkv, block_size, D)
+    v: jax.Array
+    block_table: jax.Array  # (max_slots, pages_per_slot) int32; >= num_pages = unmapped
+    length: jax.Array       # (max_slots,) int32
+    k_scale: jax.Array | None = None  # (L, num_pages, Hkv, block_size, 1) f32
+    v_scale: jax.Array | None = None
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[3]
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[1]
 
 
 def init_layer(key, cfg) -> dict:
@@ -136,6 +163,38 @@ def forward(
 
         (x, aux_total), kvs = jax.lax.scan(body, (x, aux_total), params["layers"], unroll=cfg.scan_unroll)
         new_cache = kvs  # (kh (L,B,H,T,D), vh (L,B,H,T,D))
+    elif isinstance(cache, PagedKVCache):
+        # paged decode: carry the page pools (layer-sliced like the contiguous
+        # path below); block table and lengths are layer-invariant
+        quant = cache.k_scale is not None
+
+        def body(carry, inp):
+            x, aux, k_p, v_p, k_s, v_s = carry
+            lp, l_idx = inp
+            layer_cache = PagedLayerCache(
+                jax.lax.dynamic_index_in_dim(k_p, l_idx, 0, keepdims=False),
+                jax.lax.dynamic_index_in_dim(v_p, l_idx, 0, keepdims=False),
+                cache.block_table, cache.length,
+                jax.lax.dynamic_index_in_dim(k_s, l_idx, 0, keepdims=False) if quant else None,
+                jax.lax.dynamic_index_in_dim(v_s, l_idx, 0, keepdims=False) if quant else None,
+            )
+            x, a, kv = _layer_apply(lp, x, cfg, positions, layer_cache)
+            k_p = jax.lax.dynamic_update_index_in_dim(k_p, kv.k, l_idx, 0)
+            v_p = jax.lax.dynamic_update_index_in_dim(v_p, kv.v, l_idx, 0)
+            if quant:
+                k_s = jax.lax.dynamic_update_index_in_dim(k_s, kv.k_scale, l_idx, 0)
+                v_s = jax.lax.dynamic_update_index_in_dim(v_s, kv.v_scale, l_idx, 0)
+            return (x, aux + a, k_p, v_p, k_s, v_s), None
+
+        (x, aux_total, k_new, v_new, ks_new, vs_new), _ = jax.lax.scan(
+            body,
+            (x, aux_total, cache.k, cache.v, cache.k_scale, cache.v_scale),
+            (params["layers"], jnp.arange(cfg.num_layers)),
+            unroll=cfg.scan_unroll,
+        )
+        new_cache = PagedKVCache(
+            k_new, v_new, cache.block_table, cache.length + t, ks_new, vs_new
+        )
     else:
         # decode: thread the FULL stacked cache through the carry and update
         # layer slices in place — consuming cache.k as scan xs and restacking
@@ -190,6 +249,25 @@ def _forward_unrolled(layers, x, cfg, positions, cache: LMCache | None, collect_
             new_cache = None
         return x, aux_total, new_cache
     t = x.shape[1]
+    if isinstance(cache, PagedKVCache):
+        quant = cache.k_scale is not None
+        k_full, v_full = cache.k, cache.v
+        k_s, v_s = cache.k_scale, cache.v_scale
+        for l_idx, lp in enumerate(layers):
+            layer_cache = PagedLayerCache(
+                k_full[l_idx], v_full[l_idx], cache.block_table, cache.length,
+                k_s[l_idx] if quant else None, v_s[l_idx] if quant else None,
+            )
+            x, a, kv = _layer_apply(lp, x, cfg, positions, layer_cache)
+            aux_total = aux_total + a
+            k_full = k_full.at[l_idx].set(kv.k)
+            v_full = v_full.at[l_idx].set(kv.v)
+            if quant:
+                k_s = k_s.at[l_idx].set(kv.k_scale)
+                v_s = v_s.at[l_idx].set(kv.v_scale)
+        return x, aux_total, PagedKVCache(
+            k_full, v_full, cache.block_table, cache.length + t, k_s, v_s
+        )
     k_full, v_full = cache.k, cache.v
     for l_idx, lp in enumerate(layers):
         layer_cache = KVCache(k_full[l_idx], v_full[l_idx], cache.length)
@@ -206,6 +284,68 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> LMCache:
         k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
         length=jnp.zeros((), jnp.int32),
     )
+
+
+def init_paged_cache(
+    cfg,
+    max_slots: int,
+    num_pages: int,
+    block_size: int,
+    pages_per_slot: int,
+    dtype=jnp.bfloat16,
+    quantized: bool = False,
+) -> PagedKVCache:
+    """Fixed page pool per layer; the whole block table starts unmapped."""
+    pool = (cfg.num_layers, num_pages, cfg.num_kv_heads, block_size, cfg.head_dim)
+    payload = jnp.int8 if quantized else dtype
+    scale = (
+        jnp.zeros(pool[:-1] + (1,), jnp.float32) if quantized else None
+    )
+    return PagedKVCache(
+        k=jnp.zeros(pool, payload),
+        v=jnp.zeros(pool, payload),
+        block_table=jnp.full((max_slots, pages_per_slot), num_pages, jnp.int32),
+        length=jnp.zeros((max_slots,), jnp.int32),
+        k_scale=scale,
+        v_scale=None if scale is None else jnp.zeros_like(scale),
+    )
+
+
+def scatter_prefill_pages(
+    cache: PagedKVCache,
+    kvs,                    # stacked prefill heads: (kh, vh), each (L, B, Hkv, T, D)
+    page_map: jax.Array,    # (B, T // block_size) int32 page ids; >= num_pages drops
+) -> PagedKVCache:
+    """Write whole prompt blocks into the page pool (the prefill-side insert).
+
+    T must be a multiple of the block size; trailing positions of a slot's
+    last block may carry junk from prompt padding — the per-slot length mask
+    never attends them.
+    """
+    kh, vh = kvs
+    l, b, h, t, d = kh.shape
+    bs = cache.block_size
+    assert t % bs == 0, (t, bs)
+    pages = page_map.reshape(-1)                       # (B * nb,)
+
+    def scatter(pool, heads, quantize):
+        # (L, B, H, T, D) -> (L, B*nb, H, bs, D) chunks aligned with ``pages``
+        chunks = heads.reshape(l, b, h, t // bs, bs, d)
+        chunks = chunks.transpose(0, 1, 3, 2, 4, 5).reshape(l, -1, h, bs, d)
+        if quantize:
+            from ..serving.kv_quant import quantize_kv
+
+            q, s = quantize_kv(chunks)
+            return (
+                pool[0].at[:, pages].set(q, mode="drop"),
+                pool[1].at[:, pages].set(s, mode="drop"),
+            )
+        return pool[0].at[:, pages].set(chunks.astype(pool[0].dtype), mode="drop"), None
+
+    quant = cache.k_scale is not None
+    k_new, k_s = scatter((cache.k, cache.k_scale), kh, quant)
+    v_new, v_s = scatter((cache.v, cache.v_scale), vh, quant)
+    return cache._replace(k=k_new, v=v_new, k_scale=k_s, v_scale=v_s)
 
 
 def cache_from_prefill(cfg, kvs, max_len: int, dtype=jnp.bfloat16) -> LMCache:

@@ -1,20 +1,32 @@
-"""Batched serving engine: continuous batching over two jitted programs.
+"""Batched serving engines: continuous batching over jitted programs.
 
-Slot-based scheduler: a fixed decode batch of ``max_slots`` sequences sharing
-one KV cache whose ``length`` is a per-slot ``(max_slots,)`` vector. New
-requests are admitted in groups, padded to a length bucket, and run through
-the REAL batched ``model.prefill`` program; their KV rows and logits-derived
-first tokens are scattered into free slots inside the same jitted call.
-Decode then issues exactly ONE jitted step per engine tick covering all
-active slots: sampling happens on device and a single ``(max_slots,)`` token
-array is fetched per step — no per-slot Python loop, no per-slot cache
-slicing/write-back, no per-slot host sync.
+Two batched engines share one scheduler skeleton (admit → grow → one jitted
+decode per tick):
+
+``ServingEngine`` (PR 1) — slot-padded: a fixed decode batch of ``max_slots``
+sequences sharing one contiguous KV cache in which EVERY slot reserves
+``max_len`` positions. Serving memory is governed by the longest possible
+request, not the actual workload.
+
+``PagedServingEngine`` — block-paged: KV lives in a fixed pool of
+``num_blocks`` pages of ``block_size`` tokens (``models.transformer.
+PagedKVCache``); a host-side :class:`BlockAllocator` hands pages to slots on
+demand. Requests admit whenever free pages cover their prompt plus a decode
+reservation (mid-stream admission — admission is re-tried every tick, not
+between request groups), finished or evicted slots return pages immediately,
+and when the pool runs dry a victim (longest-remaining or LRU) is evicted
+back to the queue and later resumes by re-prefilling prompt + generated
+tokens. Decode attention gathers pages through the block table (pure-JAX
+gather, or the Pallas ``kernels/paged_attention.py`` kernel under
+``kernel_impl='pallas'``); ``kv_dtype='int8'`` stores pages quantized via
+``serving/kv_quant.py``.
 
 Device programs (all shapes static, so serving never recompiles):
-  * ``prefill[bucket]`` — (params, tokens (S, bucket), lengths, slot_ids,
-    cache, step) -> (first_tokens (S,), cache); one variant per length bucket
+  * ``prefill[bucket]`` — batched prompt forward; KV rows (slot-padded) or
+    whole prompt blocks (paged) and the first sampled token scatter into
+    place inside the same jitted call
   * ``decode`` — (params, tokens (S, 1), cache, active (S,), step)
-    -> (next_tokens (S,), cache)
+    -> (next_tokens (S,), cache); ONE call per engine tick
 
 Weights may be a raw param tree (dense) or a ``DeployedModel`` serving
 SLR (L + S) weights in factored / block-CSR form — the programs are format-
@@ -34,8 +46,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import model as model_lib
+from ..models import transformer as transformer_lib
 
 BATCHED_FAMILIES = ("dense", "moe", "vlm")  # cache families with per-slot lengths
+
+# float payload dtypes; "int8" is also accepted but only by the paged engine,
+# which stores int8 payload pools + f32 scale pools (never a bare int8 cache)
+_KV_DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "bf16": jnp.bfloat16,
+}
+_EVICT_POLICIES = ("longest_remaining", "lru")
+
+
+class RequestRejected(ValueError):
+    """Raised by ``submit`` when a request can never be served by this engine
+    (too long for the cache, or larger than the whole page pool). A graceful
+    error path — the engine keeps serving everything already accepted."""
+
+
+def _validate_request(prompt: list[int], max_new_tokens: int, max_len: int):
+    if len(prompt) < 1:
+        raise RequestRejected("empty prompt")
+    if len(prompt) + max_new_tokens > max_len:
+        raise RequestRejected(
+            f"prompt({len(prompt)}) + max_new({max_new_tokens}) exceeds "
+            f"cache capacity {max_len}"
+        )
 
 
 @dataclass
@@ -46,18 +84,30 @@ class Request:
     out_tokens: list[int] = field(default_factory=list)
     done: bool = False
     submitted_at: float = 0.0
+    admitted_at: float = 0.0
+    first_token_at: float = 0.0      # TTFT = first_token_at - submitted_at
     finished_at: float = 0.0
+    token_times: list[float] = field(default_factory=list)
+    deadline: float | None = None    # absolute wall-clock SLO deadline
+    evictions: int = 0
 
 
 @dataclass
 class EngineConfig:
     max_slots: int = 4        # concurrent sequences (decode batch)
-    max_len: int = 256        # cache capacity per slot
+    max_len: int = 256        # max prompt+generation length per request
     greedy: bool = True
     temperature: float = 1.0  # used when greedy=False (on-device sampling)
     eos_token: int | None = None
     seed: int = 0
     min_bucket: int = 8       # smallest prefill length bucket
+    # paged engine only:
+    block_size: int = 16      # tokens per KV page
+    num_blocks: int | None = None   # page pool size; None = max_slots * max_len worth
+    kv_dtype: str = "float32"       # float32 | bfloat16 | int8 (paged pages quantized)
+    evict_policy: str = "longest_remaining"  # or "lru"
+    decode_reserve: int | None = None  # decode headroom (tokens) required to admit;
+    #                                    None = one block
 
 
 def _as_params(params_or_deployed):
@@ -67,14 +117,38 @@ def _as_params(params_or_deployed):
 
 
 class ServingEngine:
-    """Single-host batched engine; the multi-pod path swaps the jitted fns
-    for their pjit'd versions (same signatures — see launch/serve.py)."""
+    """Single-host batched slot-padded engine; the multi-pod path swaps the
+    jitted fns for their pjit'd versions (same signatures — launch/serve.py)."""
 
     def __init__(self, arch_cfg, params, ecfg: EngineConfig = EngineConfig()):
+        self._init_common(arch_cfg, params, ecfg)
+        if ecfg.kv_dtype == "int8":
+            raise ValueError(
+                "int8 KV needs the paged engine (PagedServingEngine stores "
+                "quantized pages); the contiguous engine serves float caches"
+            )
+        cache = model_lib.init_cache(
+            arch_cfg, ecfg.max_slots, ecfg.max_len,
+            dtype=_KV_DTYPES[ecfg.kv_dtype],
+        )
+        self.cache = cache._replace(
+            length=jnp.zeros((ecfg.max_slots,), jnp.int32)
+        )
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
+        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(4,))
+
+    def _init_common(self, arch_cfg, params, ecfg: EngineConfig):
         if arch_cfg.family not in BATCHED_FAMILIES:
             raise ValueError(
                 f"batched engine needs a KV-cache family, got {arch_cfg.family!r};"
                 " use ReferenceEngine for ssm/hybrid/encdec"
+            )
+        if ecfg.kv_dtype not in _KV_DTYPES and ecfg.kv_dtype != "int8":
+            raise ValueError(f"unknown kv_dtype {ecfg.kv_dtype!r}")
+        if ecfg.evict_policy not in _EVICT_POLICIES:
+            raise ValueError(
+                f"unknown evict_policy {ecfg.evict_policy!r}; "
+                f"expected one of {_EVICT_POLICIES}"
             )
         self.cfg = arch_cfg
         self.ecfg = ecfg
@@ -83,15 +157,8 @@ class ServingEngine:
         self._queue: list[Request] = []
         self._active: dict[int, Request] = {}   # slot -> request
         self._uid = 0
+        self._steps = 0
         self._last_token = np.zeros(ecfg.max_slots, np.int64)
-
-        # one shared cache; per-slot valid-prefix lengths ride inside it
-        cache = model_lib.init_cache(
-            arch_cfg, ecfg.max_slots, ecfg.max_len, dtype=jnp.float32
-        )
-        self.cache = cache._replace(
-            length=jnp.zeros((ecfg.max_slots,), jnp.int32)
-        )
         self._base_key = jax.random.PRNGKey(ecfg.seed)
 
         # instrumentation: device calls vs (re)traces — tests assert the
@@ -100,23 +167,30 @@ class ServingEngine:
         self.decode_traces = 0
         self.prefill_calls = 0
         self.prefill_traces = 0
-
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
-        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(4,))
+        self.evictions = 0
 
     # ------------------------------------------------------------ intake ---
 
-    def submit(self, prompt: list[int], max_new_tokens: int = 16) -> int:
-        assert len(prompt) >= 1, "empty prompt"
-        assert len(prompt) + max_new_tokens <= self.ecfg.max_len, (
-            f"prompt({len(prompt)}) + max_new({max_new_tokens}) exceeds "
-            f"cache capacity {self.ecfg.max_len}"
-        )
+    def submit(self, prompt: list[int], max_new_tokens: int = 16,
+               deadline: float | None = None) -> int:
+        self._validate(prompt, max_new_tokens)
         self._uid += 1
         self._queue.append(
-            Request(self._uid, list(prompt), max_new_tokens, submitted_at=time.time())
+            Request(self._uid, list(prompt), max_new_tokens,
+                    submitted_at=time.time(), deadline=deadline)
         )
         return self._uid
+
+    def _validate(self, prompt: list[int], max_new_tokens: int):
+        _validate_request(prompt, max_new_tokens, self.ecfg.max_len)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue or self._active)
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
 
     # ----------------------------------------------------- device programs ---
 
@@ -137,6 +211,7 @@ class ServingEngine:
         logits, new_cache = model_lib.decode_step(params, tokens, cache, self.cfg)
         # only active slots advance their valid prefix; inactive slots wrote a
         # junk row at their frozen position — the next real token overwrites it
+        # (paged: inactive slots map to unmapped pages, the write dropped)
         new_len = jnp.where(active, new_cache.length, cache.length)
         next_tok = self._sample(logits[:, -1], step, salt=0)
         return next_tok, new_cache._replace(length=new_len)
@@ -177,9 +252,11 @@ class ServingEngine:
         lengths = np.ones((s,), np.int32)        # padded rows: 1 valid token
         slot_ids = np.full((s,), s, np.int32)    # out-of-range => dropped
         slots = []
+        now = time.time()
         for i, req in enumerate(reqs):
             slot = free.pop()
             slots.append(slot)
+            req.admitted_at = now
             self._active[slot] = req
             tokens[i, : len(req.prompt)] = req.prompt
             lengths[i] = len(req.prompt)
@@ -194,42 +271,293 @@ class ServingEngine:
             self._record(slot, req, int(firsts[i]), free, done)
 
     def _record(self, slot: int, req: Request, tok: int, free, done):
+        now = time.time()
         req.out_tokens.append(tok)
+        req.token_times.append(now)
+        if req.first_token_at == 0.0:
+            req.first_token_at = now
         self._last_token[slot] = tok
         if len(req.out_tokens) >= req.max_new_tokens or (
             self.ecfg.eos_token is not None and tok == self.ecfg.eos_token
         ):
             req.done = True
-            req.finished_at = time.time()
+            req.finished_at = now
             done.append(req)
             del self._active[slot]
             free.append(slot)
+            self._release(slot)
+
+    def _release(self, slot: int):
+        """Hook: the paged engine returns the slot's pages to the pool."""
+
+    def _pre_decode(self, free: list[int], done: list[Request]):
+        """Hook: the paged engine grows page allocations / evicts here."""
+
+    def _device_cache(self):
+        """Hook: the paged engine pushes host block-table updates here."""
+        return self.cache
+
+    def step(self) -> list[Request]:
+        """ONE engine tick: admit whatever fits, then one jitted decode step
+        over all active slots. Returns requests that finished this tick."""
+        done: list[Request] = []
+        s = self.ecfg.max_slots
+        self._steps += 1
+        free = [x for x in range(s) if x not in self._active]
+        self._admit(free, done, self._steps)
+        if not self._active:
+            return done
+        self._pre_decode(free, done)
+        if not self._active:
+            return done
+        active = np.zeros((s,), bool)
+        tokens = np.zeros((s, 1), np.int32)
+        for slot in self._active:
+            active[slot] = True
+            tokens[slot, 0] = self._last_token[slot]
+        nxt, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self._device_cache(),
+            jnp.asarray(active), jnp.asarray(self._steps, jnp.int32),
+        )
+        self.decode_calls += 1
+        toks = np.asarray(nxt)               # ONE host sync per step
+        for slot, req in list(self._active.items()):
+            self._record(slot, req, int(toks[slot]), free, done)
+        return done
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         """Drive everything to completion (batch mode)."""
         done: list[Request] = []
-        s = self.ecfg.max_slots
-        free = [x for x in range(s) if x not in self._active]
         steps = 0
-        while (self._queue or self._active) and steps < max_steps:
+        while self.has_work and steps < max_steps:
             steps += 1
-            self._admit(free, done, steps)
-            if not self._active:
-                continue
-            active = np.zeros((s,), bool)
-            tokens = np.zeros((s, 1), np.int32)
-            for slot in self._active:
-                active[slot] = True
-                tokens[slot, 0] = self._last_token[slot]
-            nxt, self.cache = self._decode(
-                self.params, jnp.asarray(tokens), self.cache,
-                jnp.asarray(active), jnp.asarray(steps, jnp.int32),
-            )
-            self.decode_calls += 1
-            toks = np.asarray(nxt)               # ONE host sync per step
-            for slot, req in list(self._active.items()):
-                self._record(slot, req, int(toks[slot]), free, done)
+            done.extend(self.step())
         return done
+
+
+# ------------------------------------------------------------------ paged ---
+
+
+class BlockAllocator:
+    """Host-side allocator over a fixed pool of KV pages.
+
+    Pages are interchangeable — any free page can map any (slot, block)
+    position, so there is no external fragmentation by construction; the only
+    waste is internal (the partially-filled last block of each sequence).
+    Invariants (asserted in tests): a page is never handed out twice, frees
+    must return owned pages, and free + allocated always equals the pool.
+    """
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, -1, -1))
+        self._owned: set[int] = set()
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return len(self._owned)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """n pages, or None if the pool cannot cover them (no partial grants)."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned.update(pages)
+        return pages
+
+    def free(self, pages: list[int]):
+        for p in pages:
+            if p not in self._owned:
+                raise ValueError(f"freeing page {p} that is not allocated")
+            self._owned.remove(p)
+            self._free.append(p)
+
+
+class PagedServingEngine(ServingEngine):
+    """Continuously-batched engine over a block-paged KV cache.
+
+    Serving memory is ``num_blocks * block_size`` tokens of KV shared by all
+    slots — short requests no longer pay for ``max_len``. Admission happens
+    whenever a slot AND enough free pages exist (checked every tick); decode
+    allocations grow one page at a time, and pool exhaustion evicts a victim
+    back to the queue (it resumes later by re-prefilling prompt + generated
+    tokens, which under greedy decoding reproduces the same continuation).
+    """
+
+    def __init__(self, arch_cfg, params, ecfg: EngineConfig = EngineConfig()):
+        self._init_common(arch_cfg, params, ecfg)
+        bs = ecfg.block_size
+        assert bs >= 1
+        self._bs = bs
+        self._max_len = -(-ecfg.max_len // bs) * bs
+        self._nb_slot = self._max_len // bs          # block-table width
+        self.num_blocks = ecfg.num_blocks or ecfg.max_slots * self._nb_slot
+        self.allocator = BlockAllocator(self.num_blocks)
+        self._quantized = ecfg.kv_dtype == "int8"
+        self.cache = model_lib.init_paged_cache(
+            arch_cfg, ecfg.max_slots, self.num_blocks, bs, self._nb_slot,
+            dtype=jnp.float32 if self._quantized else _KV_DTYPES[ecfg.kv_dtype],
+            quantized=self._quantized,
+        )
+        # host mirror of the block table; pushed to device only when dirty
+        self._table = np.full(
+            (ecfg.max_slots, self._nb_slot), self.num_blocks, np.int32
+        )
+        self._table_dirty = False
+        self._pages: dict[int, list[int]] = {}       # slot -> page ids
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
+        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(5,))
+
+    # ------------------------------------------------------------ intake ---
+
+    def _validate(self, prompt: list[int], max_new_tokens: int):
+        super()._validate(prompt, max_new_tokens)
+        need = -(-(len(prompt) + max_new_tokens) // self._bs)
+        if need > self.num_blocks:
+            raise RequestRejected(
+                f"request needs {need} KV pages but the whole pool holds "
+                f"{self.num_blocks}"
+            )
+
+    def _bucket(self, n: int) -> int:
+        b = super()._bucket(n)
+        return min(-(-max(b, self._bs) // self._bs) * self._bs, self._max_len)
+
+    # ----------------------------------------------------- device programs ---
+
+    def _prefill_fn(self, params, tokens, lengths, slot_ids, page_map, cache, step):
+        self.prefill_traces += 1
+        logits, kvs, _ = model_lib._forward(
+            params, {"tokens": tokens}, self.cfg, collect_kv=True
+        )
+        cache = transformer_lib.scatter_prefill_pages(cache, kvs, page_map)
+        new_len = cache.length.at[slot_ids].set(lengths, mode="drop")
+        last = jnp.take_along_axis(logits, (lengths - 1)[:, None, None], axis=1)
+        first_tok = self._sample(last[:, 0], step, salt=1)
+        return first_tok, cache._replace(length=new_len)
+
+    # ------------------------------------------------------------- steps ---
+
+    def _admit(self, free: list[int], done: list[Request], step: int):
+        """Admit every queued request that a free slot + free pages can cover
+        (earliest deadline first when deadlines are present, else FIFO)."""
+        if not self._queue or not free:
+            return
+        if any(r.deadline is not None for r in self._queue):
+            self._queue.sort(
+                key=lambda r: (r.deadline is None, r.deadline or 0.0, r.uid)
+            )
+        reserve = self.ecfg.decode_reserve or self._bs
+        admitted: list[tuple[int, Request, list[int], int]] = []
+        while self._queue and free:
+            req = self._queue[0]
+            ptoks = req.prompt + req.out_tokens      # evicted requests resume
+            remaining = max(req.max_new_tokens - len(req.out_tokens), 1)
+            want = len(ptoks) + min(max(reserve, 1), remaining)
+            blocks = min(-(-want // self._bs), self._nb_slot)
+            pages = self.allocator.alloc(blocks)
+            if pages is None:
+                break                                # pool full: stay queued
+            self._queue.pop(0)
+            slot = free.pop()
+            req.admitted_at = time.time()
+            self._active[slot] = req
+            self._pages[slot] = pages
+            self._table[slot, : len(pages)] = pages
+            self._table_dirty = True
+            admitted.append((slot, req, pages, len(ptoks)))
+        if not admitted:
+            return
+
+        s = self.ecfg.max_slots
+        bucket = self._bucket(max(plen for _, _, _, plen in admitted))
+        nb_bucket = bucket // self._bs
+        tokens = np.zeros((s, bucket), np.int32)
+        lengths = np.ones((s,), np.int32)
+        slot_ids = np.full((s,), s, np.int32)
+        page_map = np.full((s, nb_bucket), self.num_blocks, np.int32)
+        for i, (slot, req, pages, plen) in enumerate(admitted):
+            ptoks = req.prompt + req.out_tokens
+            tokens[i, :plen] = ptoks
+            lengths[i] = plen
+            slot_ids[i] = slot
+            prompt_blocks = -(-plen // self._bs)
+            page_map[i, :prompt_blocks] = pages[:prompt_blocks]
+        first, self.cache = self._prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(slot_ids), jnp.asarray(page_map), self.cache,
+            jnp.asarray(step, jnp.int32),
+        )
+        self.prefill_calls += 1
+        firsts = np.asarray(first)
+        for i, (slot, req, _, _) in enumerate(admitted):
+            self._record(slot, req, int(firsts[i]), free, done)
+
+    def _pre_decode(self, free: list[int], done: list[Request]):
+        """Grow each active slot's pages to cover this tick's KV write; evict
+        when the pool is dry. The next decode writes the KV of the latest
+        sampled token at position len(prompt) + len(out) - 1."""
+        for slot in list(self._active):
+            req = self._active.get(slot)
+            if req is None:
+                continue
+            write_pos = len(req.prompt) + len(req.out_tokens) - 1
+            need = write_pos // self._bs + 1
+            while slot in self._active and len(self._pages[slot]) < need:
+                page = self.allocator.alloc(1)
+                if page is not None:
+                    idx = len(self._pages[slot])
+                    self._pages[slot].append(page[0])
+                    self._table[slot, idx] = page[0]
+                    self._table_dirty = True
+                    continue
+                victim = self._choose_victim()
+                self._evict(victim, free)
+
+    def _choose_victim(self) -> int:
+        if self.ecfg.evict_policy == "lru":
+            # least-recently admitted slot
+            return min(self._active, key=lambda s: (self._active[s].admitted_at, s))
+        # longest_remaining: its pages stay pinned for the longest otherwise
+        return max(
+            self._active,
+            key=lambda s: (
+                self._active[s].max_new_tokens - len(self._active[s].out_tokens), s
+            ),
+        )
+
+    def _evict(self, slot: int, free: list[int]):
+        """Return the slot's pages and push its request to the queue head; it
+        re-prefills prompt + generated tokens on re-admission."""
+        req = self._active.pop(slot)
+        req.evictions += 1
+        self.evictions += 1
+        self._release(slot)
+        self._queue.insert(0, req)
+        free.append(slot)
+
+    def _release(self, slot: int):
+        pages = self._pages.pop(slot, None)
+        if pages:
+            self.allocator.free(pages)
+        self._table[slot, :] = self.num_blocks
+        self._table_dirty = True
+
+    def _device_cache(self):
+        if self._table_dirty:
+            self.cache = self.cache._replace(block_table=jnp.asarray(self._table))
+            self._table_dirty = False
+        return self.cache
+
+
+# -------------------------------------------------------------- reference ---
 
 
 class ReferenceEngine:
@@ -258,16 +586,19 @@ class ReferenceEngine:
 
     # ------------------------------------------------------------ intake ---
 
-    def submit(self, prompt: list[int], max_new_tokens: int = 16) -> int:
-        assert len(prompt) + max_new_tokens <= self.ecfg.max_len, (
-            f"prompt({len(prompt)}) + max_new({max_new_tokens}) exceeds "
-            f"cache capacity {self.ecfg.max_len}"
-        )
+    def submit(self, prompt: list[int], max_new_tokens: int = 16,
+               deadline: float | None = None) -> int:
+        _validate_request(prompt, max_new_tokens, self.ecfg.max_len)
         self._uid += 1
         self._queue.append(
-            Request(self._uid, list(prompt), max_new_tokens, submitted_at=time.time())
+            Request(self._uid, list(prompt), max_new_tokens,
+                    submitted_at=time.time(), deadline=deadline)
         )
         return self._uid
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue or self._active)
 
     # ------------------------------------------------------------- steps ---
 
@@ -296,12 +627,16 @@ class ReferenceEngine:
                 last = (req.out_tokens or req.prompt)[-1]
                 nxt = self._step_slot(slot, last)
                 req.out_tokens.append(int(nxt))
+                now = time.time()
+                req.token_times.append(now)
+                if req.first_token_at == 0.0:
+                    req.first_token_at = now
                 if (
                     len(req.out_tokens) >= req.max_new_tokens
                     or (self.ecfg.eos_token is not None and nxt == self.ecfg.eos_token)
                 ):
                     req.done = True
-                    req.finished_at = time.time()
+                    req.finished_at = now
                     done.append(req)
                     del self._active[slot]
                     free.append(slot)

@@ -1,0 +1,307 @@
+"""Paged KV cache + continuous batching tests.
+
+Covers the PR 2 tentpole invariants: block-allocator accounting, paged
+decode attention matching the contiguous cache bitwise, the Pallas paged
+kernel matching its jnp oracle, and the paged engine producing IDENTICAL
+token streams to the slot-padded engine on a fixed trace — including under
+mid-stream admission, forced eviction, and int8 page quantization.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.kernels.ops import paged_attention
+from repro.kernels.ref import paged_attention_ref
+from repro.models import model as model_lib
+from repro.models import transformer as transformer_lib
+from repro.serving.engine import (
+    BlockAllocator,
+    EngineConfig,
+    PagedServingEngine,
+    ReferenceEngine,
+    RequestRejected,
+    ServingEngine,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_arch("salaad_llama_60m").reduced()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+class TestBlockAllocator:
+    def test_alloc_free_roundtrip(self):
+        a = BlockAllocator(8)
+        pages = a.alloc(5)
+        assert len(pages) == 5 and len(set(pages)) == 5
+        assert a.free_blocks == 3 and a.used_blocks == 5
+        a.free(pages[:2])
+        assert a.free_blocks == 5 and a.used_blocks == 3
+        a.free(pages[2:])
+        assert a.free_blocks == 8 and a.used_blocks == 0
+
+    def test_no_partial_grants_and_no_double_alloc(self):
+        a = BlockAllocator(4)
+        p1 = a.alloc(3)
+        assert a.alloc(2) is None          # only 1 free: refuse, don't shrink
+        assert a.free_blocks == 1
+        p2 = a.alloc(1)
+        assert set(p1).isdisjoint(p2)      # a page is never handed out twice
+        assert a.alloc(1) is None
+
+    def test_double_free_rejected(self):
+        a = BlockAllocator(4)
+        pages = a.alloc(2)
+        a.free(pages)
+        with pytest.raises(ValueError):
+            a.free(pages)
+
+    def test_interchangeable_pages_no_fragmentation(self):
+        """Freeing ANY n pages lets ANY n-page request through: pool capacity
+        is the only constraint (no contiguity, no external fragmentation)."""
+        a = BlockAllocator(6)
+        held = [a.alloc(2) for _ in range(3)]
+        a.free(held[0])
+        a.free(held[2])                    # non-adjacent frees
+        assert a.alloc(4) is not None      # still a single 4-page grant
+
+
+class TestPagedAttentionKernel:
+    def _pool(self, seed=0, b=3, hq=4, hkv=2, d=8, bs=4, nb=4, n=10):
+        rng = np.random.RandomState(seed)
+        q = jnp.asarray(rng.randn(b, hq, d), jnp.float32)
+        kp = jnp.asarray(rng.randn(n, hkv, bs, d), jnp.float32)
+        vp = jnp.asarray(rng.randn(n, hkv, bs, d), jnp.float32)
+        # ragged per-slot lengths; slot 1 is empty; unmapped tails everywhere
+        bt = jnp.asarray([[0, 1, n, n], [2, n, n, n], [3, 4, 5, n]], jnp.int32)
+        lengths = jnp.asarray([5, 0, 11], jnp.int32)
+        return q, kp, vp, bt, lengths
+
+    def test_pallas_matches_ref(self):
+        q, kp, vp, bt, lengths = self._pool()
+        out = paged_attention(q, kp, vp, bt, lengths)
+        ref = paged_attention_ref(q, kp, vp, bt, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+    def test_ref_matches_contiguous_masked_attention(self):
+        """Gathering pages through the block table reproduces the contiguous
+        per-slot decode attention exactly (same values at positions < len)."""
+        q, kp, vp, bt, lengths = self._pool()
+        n, hkv, bs, d = kp.shape
+        b, hq, _ = q.shape
+        s = bt.shape[1] * bs
+        # materialize the contiguous equivalent: position j <- page[j//bs]
+        kc = np.zeros((b, hkv, s, d), np.float32)
+        vc = np.zeros((b, hkv, s, d), np.float32)
+        btn = np.asarray(bt)
+        for bi in range(b):
+            for j in range(int(lengths[bi]) + 1):
+                pg = btn[bi, j // bs]
+                if pg < n:
+                    kc[bi, :, j] = np.asarray(kp)[pg, :, j % bs]
+                    vc[bi, :, j] = np.asarray(vp)[pg, :, j % bs]
+        group = hq // hkv
+        qg = np.asarray(q).reshape(b, hkv, group, d) / np.sqrt(d)
+        sc = np.einsum("bhgd,bhsd->bhgs", qg, kc)
+        mask = np.arange(s)[None, :] <= np.asarray(lengths)[:, None]
+        sc = np.where(mask[:, None, None], sc, -1e30)
+        w = jax.nn.softmax(jnp.asarray(sc), axis=-1)
+        exp = np.einsum("bhgs,bhsd->bhgd", np.asarray(w), vc).reshape(b, hq, d)
+        got = np.asarray(paged_attention_ref(q, kp, vp, bt, lengths))
+        np.testing.assert_allclose(got, exp, atol=1e-5)
+
+
+class TestPagedDecodeEquivalence:
+    """Paged decode through the REAL model == contiguous-cache decode,
+    bitwise, at ragged per-slot lengths."""
+
+    def test_logits_bitwise_equal(self, tiny):
+        cfg, params = tiny
+        S, max_len, bs = 3, 32, 8
+        nb = max_len // bs
+        prompts = [[5, 7, 11, 2, 9], [3, 1], [2, 9, 4, 6, 1, 8, 3]]
+        bucket = 8
+        toks = np.zeros((S, bucket), np.int32)
+        lens = np.ones((S,), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, : len(p)] = p
+            lens[i] = len(p)
+
+        # contiguous per-slot cache via the batched prefill
+        cache = model_lib.init_cache(cfg, S, max_len, dtype=jnp.float32)
+        _, pc = model_lib.prefill(
+            params, {"tokens": jnp.asarray(toks)}, cfg, max_len=max_len,
+            cache_dtype=jnp.float32,
+        )
+        cache = cache._replace(
+            k=cache.k.at[:, jnp.arange(S)].set(pc.k),
+            v=cache.v.at[:, jnp.arange(S)].set(pc.v),
+            length=jnp.asarray(lens),
+        )
+
+        # paged cache: same prefill heads scattered into pages
+        num_pages = S * nb
+        paged = model_lib.init_paged_cache(
+            cfg, S, num_pages, bs, nb, dtype=jnp.float32
+        )
+        _, kvs, _ = model_lib._forward(
+            params, {"tokens": jnp.asarray(toks)}, cfg, collect_kv=True
+        )
+        table = np.full((S, nb), num_pages, np.int32)
+        page_map = np.full((S, bucket // bs), num_pages, np.int32)
+        nxt = 0
+        for i, p in enumerate(prompts):
+            need = -(-(len(p) + 4) // bs)          # prompt + decode room
+            for j in range(need):
+                table[i, j] = nxt
+                if j < -(-len(p) // bs):
+                    page_map[i, j] = nxt
+                nxt += 1
+        paged = paged._replace(
+            block_table=jnp.asarray(table), length=jnp.asarray(lens)
+        )
+        paged = transformer_lib.scatter_prefill_pages(
+            paged, kvs, jnp.asarray(page_map)
+        )
+
+        tok = jnp.asarray([[9], [4], [7]], jnp.int32)
+        for _ in range(3):
+            lg_c, cache = model_lib.decode_step(params, tok, cache, cfg)
+            lg_p, paged = model_lib.decode_step(params, tok, paged, cfg)
+            assert np.array_equal(np.asarray(lg_c), np.asarray(lg_p)), (
+                "paged decode logits diverged from contiguous"
+            )
+
+
+class TestPagedEngine:
+    PROMPTS = [[5, 7, 11], [3, 1], [2, 9, 4, 6], [8, 8, 2], [1, 2, 3, 4, 5, 6], [9, 1]]
+
+    def _tokens(self, engine, max_new=5):
+        for p in self.PROMPTS:
+            engine.submit(p, max_new_tokens=max_new)
+        return {r.uid: r.out_tokens for r in engine.run()}
+
+    def test_matches_unpaged_engine_midstream_admission(self, tiny):
+        """6 requests over 2 slots: admissions happen mid-stream while other
+        slots are mid-decode; token streams must be identical per uid."""
+        cfg, params = tiny
+        ref = self._tokens(ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=32)))
+        got = self._tokens(PagedServingEngine(
+            cfg, params, EngineConfig(max_slots=2, max_len=32, block_size=8)
+        ))
+        assert got == ref
+        assert all(len(t) == 5 for t in got.values())
+
+    @pytest.mark.parametrize("policy", ["longest_remaining", "lru"])
+    def test_eviction_preserves_tokens(self, tiny, policy):
+        """A pool too small for two full requests forces eviction; the evicted
+        request resumes by re-prefilling and must emit the same tokens."""
+        cfg, params = tiny
+        prompts = [[5, 7, 11], [3, 1, 4]]
+        e_ref = ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=16))
+        for p in prompts:
+            e_ref.submit(p, max_new_tokens=10)
+        ref = {r.uid: r.out_tokens for r in e_ref.run()}
+
+        eng = PagedServingEngine(cfg, params, EngineConfig(
+            max_slots=2, max_len=16, block_size=4, num_blocks=4,
+            decode_reserve=1, evict_policy=policy,
+        ))
+        for p in prompts:
+            eng.submit(p, max_new_tokens=10)
+        got = {r.uid: r.out_tokens for r in eng.run()}
+        assert eng.evictions >= 1, "pool was sized to force an eviction"
+        assert got == ref
+        assert eng.allocator.used_blocks == 0   # everything returned
+
+    def test_pages_released_incrementally(self, tiny):
+        """Finished requests return pages immediately (not at drain time)."""
+        cfg, params = tiny
+        eng = PagedServingEngine(cfg, params, EngineConfig(
+            max_slots=2, max_len=32, block_size=8
+        ))
+        eng.submit([1, 2, 3], max_new_tokens=4)
+        eng.submit([4, 5], max_new_tokens=12)
+        seen_free = []
+        while eng.has_work:
+            eng.step()
+            seen_free.append(eng.allocator.free_blocks)
+        assert eng.allocator.used_blocks == 0
+        # free count must rise strictly before the drain completes
+        assert max(seen_free[:-1]) > min(seen_free[:-1])
+
+    def test_rejects_oversized_requests(self, tiny):
+        cfg, params = tiny
+        for eng in (
+            ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=16)),
+            PagedServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=16, block_size=8)),
+            ReferenceEngine(cfg, params, EngineConfig(max_slots=2, max_len=16)),
+        ):
+            with pytest.raises(RequestRejected):
+                eng.submit(list(range(1, 20)), max_new_tokens=4)
+            assert not eng.has_work  # rejection leaves the engine clean
+
+    def test_rejects_empty_prompt_and_tiny_pool(self, tiny):
+        cfg, params = tiny
+        eng = PagedServingEngine(cfg, params, EngineConfig(
+            max_slots=2, max_len=16, block_size=4, num_blocks=2
+        ))
+        with pytest.raises(RequestRejected):
+            eng.submit([], max_new_tokens=2)
+        with pytest.raises(RequestRejected):
+            # fits max_len but can never fit the 2-page pool
+            eng.submit([1, 2, 3, 4, 5], max_new_tokens=8)
+        eng.submit([1, 2, 3], max_new_tokens=4)      # 2 pages: fits
+        assert len(eng.run()) == 1
+
+    def test_int8_pages_match_float(self, tiny):
+        """kv_dtype='int8' stores quantized pages (serving/kv_quant.py layout)
+        and still greedy-decodes the same tokens at init scale."""
+        cfg, params = tiny
+        ref = self._tokens(PagedServingEngine(
+            cfg, params, EngineConfig(max_slots=2, max_len=32, block_size=8)
+        ))
+        eng = PagedServingEngine(cfg, params, EngineConfig(
+            max_slots=2, max_len=32, block_size=8, kv_dtype="int8"
+        ))
+        assert eng.cache.k.dtype == jnp.int8 and eng.cache.k_scale is not None
+        got = self._tokens(eng)
+        assert got == ref
+
+    def test_int8_rejected_by_contiguous_engine(self, tiny):
+        cfg, params = tiny
+        with pytest.raises(ValueError):
+            ServingEngine(cfg, params, EngineConfig(max_slots=2, kv_dtype="int8"))
+
+    def test_pallas_kernel_through_engine(self, tiny):
+        """kernel_impl='pallas' routes paged decode through the Pallas kernel
+        (interpret mode here) and emits the same tokens as the jnp gather."""
+        import dataclasses
+
+        cfg, params = tiny
+        out = {}
+        for impl in ("dense", "pallas"):
+            c = dataclasses.replace(cfg, kernel_impl=impl)
+            eng = PagedServingEngine(c, params, EngineConfig(
+                max_slots=2, max_len=32, block_size=8
+            ))
+            eng.submit([5, 7, 11], max_new_tokens=4)
+            eng.submit([3, 1], max_new_tokens=4)
+            out[impl] = {r.uid: r.out_tokens for r in eng.run()}
+        assert out["dense"] == out["pallas"]
+
+    def test_one_decode_trace_and_call_per_tick(self, tiny):
+        """The paged engine keeps the PR 1 invariant: ONE jitted decode step
+        per tick over all slots, compiled exactly once."""
+        cfg, params = tiny
+        eng = PagedServingEngine(cfg, params, EngineConfig(
+            max_slots=2, max_len=32, block_size=8
+        ))
+        got = self._tokens(eng)
+        total = sum(len(t) for t in got.values())
+        assert eng.decode_traces == 1
+        assert eng.decode_calls < total
