@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-latency serve-demo
+.PHONY: test bench-smoke bench bench-latency bench-spec serve-demo
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -14,6 +14,10 @@ bench-smoke:
 # latency SLO harness: paged vs slot-padded engine under Poisson arrivals
 bench-latency:
 	$(PYTHON) -m benchmarks.serve_latency --quick
+
+# speculative decode: elastic low-budget draft vs the paged engine
+bench-spec:
+	$(PYTHON) -m benchmarks.serve_spec --quick
 
 # full scaled-down paper benchmark suite
 bench:

@@ -98,3 +98,28 @@ def timed(fn, *args, warmup=1, iters=3):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def engine_provenance(engine) -> dict:
+    """Engine-config provenance recorded inside every BENCH_*.json payload so
+    the numbers stay interpretable when flags/defaults change."""
+    e = engine.ecfg
+    out = {
+        "engine": type(engine).__name__,
+        "max_slots": e.max_slots,
+        "max_len": e.max_len,
+        "block_size": e.block_size,
+        "num_blocks": getattr(engine, "num_blocks", None),
+        "kv_dtype": e.kv_dtype,
+        "evict_policy": e.evict_policy,
+        "greedy": e.greedy,
+    }
+    if getattr(e, "spec_k", 0):
+        out["spec"] = {
+            "k": e.spec_k,
+            "adaptive": e.spec_adaptive,
+            "draft_mode": "parallel" if getattr(engine, "_parallel", False)
+            else "sequential",
+            "draft_kv_dtype": e.spec_draft_kv_dtype,
+        }
+    return out

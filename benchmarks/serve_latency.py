@@ -26,9 +26,14 @@ import numpy as np
 
 from repro.configs.base import get_arch
 from repro.models import model as model_lib
-from repro.serving.engine import EngineConfig, PagedServingEngine, ServingEngine
+from repro.serving.engine import (
+    EngineConfig,
+    PagedServingEngine,
+    ServingEngine,
+    decode_emitted_tokens,
+)
 
-from .common import emit
+from .common import emit, engine_provenance
 
 
 def build_trace(n: int, rate_hz: float, vocab: int, max_new: int, seed: int):
@@ -53,6 +58,7 @@ def drive_open_loop(engine, trace, slo_ms: float) -> dict:
     scheduled: dict[int, float] = {}
     done = []
     i = 0
+    calls0 = getattr(engine, "decode_calls", 0)   # exclude warmup ticks
     t0 = time.time()
     while i < len(trace) or engine.has_work:
         now = time.time() - t0
@@ -71,6 +77,7 @@ def drive_open_loop(engine, trace, slo_ms: float) -> dict:
     ttft = [r.first_token_at - scheduled[r.uid] for r in done]
     itl = [b - a for r in done for a, b in zip(r.token_times, r.token_times[1:])]
     tokens = sum(len(r.out_tokens) for r in done)
+    decode_tokens = decode_emitted_tokens(done)
     return {
         "requests": len(done),
         "tokens": tokens,
@@ -86,6 +93,18 @@ def drive_open_loop(engine, trace, slo_ms: float) -> dict:
             sum(t * 1e3 <= slo_ms for t in ttft) / max(len(ttft), 1), 3
         ),
         "evictions": getattr(engine, "evictions", 0),
+        # decode-emitted tokens per jitted decode step, across ALL slots —
+        # i.e. mean batch occupancy x per-slot burst length (<= decode_slots
+        # without speculation; speculative bursts raise it beyond the slot
+        # count). Compare engines at equal decode_slots (also recorded).
+        # acceptance_rate is null when not drafting.
+        "tokens_per_step": round(
+            decode_tokens / max(getattr(engine, "decode_calls", 0) - calls0, 1), 2
+        ),
+        "acceptance_rate": (
+            round(engine.acceptance_rate, 3)
+            if hasattr(engine, "acceptance_rate") else None
+        ),
     }
 
 
@@ -137,6 +156,7 @@ def run(
         rows[name]["engine"] = name
         rows[name]["kv_budget_tokens"] = padded_slots * max_len
         rows[name]["decode_slots"] = eng.ecfg.max_slots
+        rows[name]["engine_config"] = engine_provenance(eng)
 
     pad, pg = rows["padded_slots"], rows["paged"]
     rows["summary"] = {

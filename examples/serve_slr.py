@@ -27,7 +27,7 @@ def main():
         selection=SelectionConfig(min_dim=16), rho_constant=0.5,
         update_every=5, exact_svd=True,
     )
-    trainer = Trainer(cfg, TrainerConfig(total_steps=30, salaad=salaad, adam=AdamConfig(lr=1e-3)))
+    trainer = Trainer(cfg, TrainerConfig(total_steps=120, salaad=salaad, adam=AdamConfig(lr=1e-3)))
     state = trainer.init(jax.random.PRNGKey(0))
     data = SyntheticC4(DataConfig(cfg.vocab_size, 32, 8))
     state = trainer.fit(state, data)
@@ -52,6 +52,25 @@ def main():
     toks = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {toks} tokens, {toks/(time.time()-t0):.1f} tok/s")
     print("sample:", done[0].out_tokens)
+
+    # elastic self-speculation: the SAME SLR state at an aggressive budget
+    # drafts for the full-budget target (one jitted k-wide verify per tick)
+    from repro.serving.speculative import SpeculativeEngine
+
+    slr_d, _ = hpa_keep_ratio(state.slr, trainer.blocks, keep_ratio=0.4, kappa=0.7)
+    draft = DeployedModel.build(cfg, state.params, slr_d, trainer.blocks, fmt="dense")
+    target = DeployedModel.build(cfg, state.params, slr_c, trainer.blocks, fmt="dense")
+    spec = SpeculativeEngine(cfg, target, draft, EngineConfig(
+        max_slots=2, max_len=48, block_size=8, spec_k=4,
+        spec_draft_mode="sequential",   # short demo: no lookahead warmup
+    ))
+    for i in range(4):
+        spec.submit([1 + i, 2, 3], max_new_tokens=6)
+    done = spec.run()
+    print(
+        f"speculative: {sum(len(r.out_tokens) for r in done)} tokens in "
+        f"{spec.decode_calls} verify steps, acceptance {spec.acceptance_rate:.2f}"
+    )
 
     # TPU-kernel path on one deployed block (interpret mode on CPU)
     linears = build_slr_linears(slr_c, trainer.blocks, fmt="bsr", bsr_block=32)

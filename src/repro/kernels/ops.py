@@ -16,7 +16,7 @@ from . import ref
 from .bsr_matmul import BsrMatrix, bsr_from_dense, bsr_matmul_pallas, bsr_to_dense
 from .flash_attention import flash_attention_pallas
 from .lowrank_matmul import lowrank_matmul_pallas
-from .paged_attention import paged_attention_pallas
+from .paged_attention import paged_attention_kquery_pallas, paged_attention_pallas
 from .soft_threshold import soft_threshold_pallas
 
 __all__ = [
@@ -28,6 +28,7 @@ __all__ = [
     "bsr_matmul",
     "flash_attention",
     "paged_attention",
+    "paged_attention_kquery",
     "bsr_occupancy",
 ]
 
@@ -65,6 +66,14 @@ def flash_attention(q, k, v, causal=True, interpret: bool | None = None, **kw):
 def paged_attention(q, k_pages, v_pages, block_table, lengths,
                     interpret: bool | None = None):
     return paged_attention_pallas(
+        q, k_pages, v_pages, block_table, lengths,
+        interpret=_auto_interpret() if interpret is None else interpret,
+    )
+
+
+def paged_attention_kquery(q, k_pages, v_pages, block_table, lengths,
+                           interpret: bool | None = None):
+    return paged_attention_kquery_pallas(
         q, k_pages, v_pages, block_table, lengths,
         interpret=_auto_interpret() if interpret is None else interpret,
     )

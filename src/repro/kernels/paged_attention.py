@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: paged single-token decode attention.
+"""Pallas TPU kernels: paged decode attention (single-query and k-query).
 
 The serving engine stores KV in a fixed pool of ``(num_pages, Hkv, bs, D)``
 pages per layer; each slot's logical sequence is scattered across pages named
@@ -17,6 +17,12 @@ to a valid pool index host-side and hidden by the positional length mask.
 Interpret mode (the CPU default via ``kernels.ops``) is the validation and
 container fallback path; on TPU hardware prefer ``block_size`` a multiple of
 128 so page tiles align with the MXU.
+
+``paged_attention_kquery_pallas`` is the speculative-verify variant: each slot
+carries ``kq`` queries at consecutive positions ``length .. length + kq - 1``
+(the just-inserted draft window). Same grid and online-softmax structure; the
+query block is ``(kq * group, D)`` with a per-row position mask, so one kernel
+invocation verifies all draft positions of all slots.
 """
 from __future__ import annotations
 
@@ -130,3 +136,111 @@ def paged_attention_pallas(
         ),
     )(tables, qf, k_pages, v_pages)
     return out.reshape(b, hq, d)
+
+
+# ------------------------------------------------------- k-query (verify) ---
+
+
+def _kquery_kernel(
+    tables_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale, bs, nb, n_kv, kq, group, table_len,
+):
+    # tables layout: [block_table (B * nb,), lengths (B,)]
+    bh = pl.program_id(0)
+    i = pl.program_id(1)
+    b = bh // n_kv
+
+    @pl.when(i == 0)
+    def init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = tables_ref[table_len + b]
+
+    # query row r = qi * group + g sits at position length + qi; the page
+    # holds visible keys for SOME row iff i * bs <= length + kq - 1
+    @pl.when(i * bs <= length + kq - 1)
+    def page():
+        q = q_ref[0].astype(jnp.float32) * scale        # (kq * group, D)
+        k = k_ref[0, 0].astype(jnp.float32)             # (bs, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (kq*group, bs)
+        pos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (kq * group, bs), 1)
+        qi = jax.lax.broadcasted_iota(jnp.int32, (kq * group, bs), 0) // group
+        s = jnp.where(pos <= length + qi, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(i == nb - 1)
+    def emit():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_kquery_pallas(
+    q: jax.Array,            # (B, Hq, kq, D) — kq queries per slot, positions
+    #                          length .. length + kq - 1 (draft verify window)
+    k_pages: jax.Array,      # (num_pages, Hkv, bs, D) page pool
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (B, pages_per_slot) int32
+    lengths: jax.Array,      # (B,) int32 pre-insert valid length per slot
+    interpret: bool = True,
+) -> jax.Array:
+    b, hq, kq, d = q.shape
+    n, hkv, bs, _ = k_pages.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    nb = block_table.shape[1]
+    scale = 1.0 / (d ** 0.5)
+
+    # rows ordered query-major: row = qi * group + g
+    qf = q.reshape(b, hkv, group, kq, d).transpose(0, 1, 3, 2, 4)
+    qf = qf.reshape(b * hkv, kq * group, d)
+    tables = jnp.concatenate(
+        [jnp.minimum(block_table, n - 1).reshape(-1), lengths]
+    ).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _kquery_kernel, scale=scale, bs=bs, nb=nb, n_kv=hkv, kq=kq,
+        group=group, table_len=b * nb,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, kq * group, d), lambda bh, i, t: (bh, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, bs, d),
+                lambda bh, i, t: (t[(bh // hkv) * nb + i], bh % hkv, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bs, d),
+                lambda bh, i, t: (t[(bh // hkv) * nb + i], bh % hkv, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, kq * group, d), lambda bh, i, t: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kq * group, 1), jnp.float32),
+            pltpu.VMEM((kq * group, 1), jnp.float32),
+            pltpu.VMEM((kq * group, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, kq * group, d), q.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+    )(tables, qf, k_pages, v_pages)
+    out = out.reshape(b, hkv, kq, group, d).transpose(0, 1, 3, 2, 4)
+    return out.reshape(b, hq, kq, d)

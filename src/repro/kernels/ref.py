@@ -56,6 +56,41 @@ def paged_attention_ref(
     return out.reshape(b, hq, d).astype(q.dtype)
 
 
+def paged_attention_kquery_ref(
+    q: jax.Array,            # (B, Hq, kq, D) — kq decode queries per slot
+    k_pages: jax.Array,      # (num_pages, Hkv, bs, D) page pool
+    v_pages: jax.Array,
+    block_table: jax.Array,  # (B, pages_per_slot) int32; >= num_pages unmapped
+    lengths: jax.Array,      # (B,) pre-insert valid length per slot
+) -> jax.Array:
+    """k-query paged attention oracle (speculative-verify window).
+
+    Query i of slot b sits at position ``lengths[b] + i`` (the KV of all kq
+    verify tokens is already in the pool), so it sees keys at positions
+    <= lengths[b] + i.
+    """
+    n, hkv, bs, d = k_pages.shape
+    b, hq, kq, _ = q.shape
+    group = hq // hkv
+    bt = jnp.minimum(block_table, n - 1)     # clamp unmapped; mask hides it
+    nb = bt.shape[1]
+
+    def gather(pages):
+        g = pages[bt]                        # (B, nb, Hkv, bs, D)
+        return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, nb * bs, d)
+
+    k, v = gather(k_pages), gather(v_pages)
+    scale = 1.0 / np.sqrt(d)
+    qg = q.reshape(b, hkv, group, kq, d).astype(jnp.float32) * scale
+    sc = jnp.einsum("bhgqd,bhsd->bhgqs", qg, k.astype(jnp.float32))
+    q_pos = lengths[:, None] + jnp.arange(kq)[None, :]           # (B, kq)
+    mask = jnp.arange(nb * bs)[None, None, :] <= q_pos[:, :, None]  # (B, kq, S)
+    sc = jnp.where(mask[:, None, None], sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgqs,bhsd->bhgqd", w, v.astype(jnp.float32))
+    return out.reshape(b, hq, kq, d).astype(q.dtype)
+
+
 def attention_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True, scale=None
 ) -> jax.Array:

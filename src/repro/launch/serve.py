@@ -29,13 +29,16 @@ from repro.serving.engine import (
     PagedServingEngine,
     ReferenceEngine,
     ServingEngine,
+    decode_emitted_tokens,
 )
 from repro.serving.slr_params import deployment_report
+from repro.serving.speculative import SpeculativeEngine
 
 ENGINES = {
     "paged": PagedServingEngine,
     "batched": ServingEngine,
     "reference": ReferenceEngine,
+    "speculative": SpeculativeEngine,
 }
 
 
@@ -70,6 +73,11 @@ def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
         )
     if hasattr(engine, "evictions"):
         stats["evictions"] = engine.evictions
+    if hasattr(engine, "acceptance_rate"):
+        stats["acceptance_rate"] = round(engine.acceptance_rate, 3)
+        stats["tokens_per_step"] = round(
+            decode_emitted_tokens(done) / max(engine.decode_calls, 1), 2
+        )
     return stats
 
 
@@ -98,6 +106,14 @@ def main():
     ap.add_argument("--kv-dtype", default="float32",
                     choices=("float32", "bfloat16", "int8"),
                     help="KV storage dtype; int8 stores quantized pages (paged)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative draft window (tokens/slot/tick); > 0 "
+                         "serves through the SpeculativeEngine")
+    ap.add_argument("--spec-budget", type=float, default=0.4,
+                    help="HPA keep-ratio of the self-speculation draft "
+                         "(the low-budget end of the elastic spectrum)")
+    ap.add_argument("--spec-adaptive", action="store_true",
+                    help="adapt the draft window from observed acceptance")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -120,29 +136,56 @@ def main():
         slr, blocks = init_slr_state(params, scfg)
 
     engine_cls = ENGINES[args.engine]
+    spec_k = args.spec_k
+    if engine_cls is SpeculativeEngine and spec_k == 0:
+        spec_k = 4
+    if spec_k > 0 and engine_cls is PagedServingEngine:
+        engine_cls = SpeculativeEngine            # --spec-k implies speculation
     if engine_cls is not ReferenceEngine and cfg.family not in BATCHED_FAMILIES:
+        # explicit capability line; paged-only features requested on this
+        # family then fail loudly in the ReferenceEngine constructor
+        # (EngineCapabilityError) instead of silently degrading
         print(json.dumps({"note": f"family {cfg.family!r} has no per-slot-length "
-                          "cache yet; falling back to the reference engine"}))
+                          "cache yet; falling back to the reference engine "
+                          "(per-slot loop; float32 contiguous cache; no "
+                          "kv_dtype / speculative decoding)"}))
         engine_cls = ReferenceEngine
     ecfg = EngineConfig(
         max_slots=args.max_slots, max_len=args.max_len,
         block_size=args.block_size, num_blocks=args.num_blocks,
         kv_dtype=args.kv_dtype,
+        spec_k=spec_k, spec_adaptive=args.spec_adaptive,
     )
 
+    def build_engine(weights, draft=None):
+        if engine_cls is SpeculativeEngine:
+            # self-speculation: default draft is the target itself (useful for
+            # dense-init smoke; real deployments pass an HPA-truncated draft)
+            return SpeculativeEngine(
+                cfg, weights, weights if draft is None else draft, ecfg
+            )
+        return engine_cls(cfg, weights, ecfg)
+
     if args.keep_ratios is None:
-        engine = engine_cls(cfg, params, ecfg)
+        engine = build_engine(params)
         print(json.dumps({"budget": None, "fmt": "dense-init",
                           **serve_batch(engine, cfg.vocab_size, args.requests,
                                         args.max_new, args.seed, args.slo_ms)}))
         return
 
     # one SALAAD state, a spectrum of served capacities — each budget deploys
-    # and serves through the same batched SLR-native programs
+    # and serves through the same batched SLR-native programs; under
+    # speculation the SAME state also yields the draft (the elastic spectrum's
+    # low-budget end, --spec-budget)
     for keep in [float(k) for k in args.keep_ratios.split(",")]:
         slr_c, report = hpa_keep_ratio(slr, blocks, keep, args.kappa)
         deployed = DeployedModel.build(cfg, params, slr_c, blocks, fmt=args.fmt)
-        engine = engine_cls(cfg, deployed, ecfg)
+        draft = None
+        if engine_cls is SpeculativeEngine:
+            draft_keep = min(args.spec_budget, keep)
+            slr_d, _ = hpa_keep_ratio(slr, blocks, draft_keep, args.kappa)
+            draft = DeployedModel.build(cfg, params, slr_d, blocks, fmt=args.fmt)
+        engine = build_engine(deployed, draft)
         stats = serve_batch(engine, cfg.vocab_size, args.requests, args.max_new,
                             args.seed, args.slo_ms)
         dep = deployment_report(params, slr_c, blocks)

@@ -48,17 +48,26 @@ class PagedLayerCache(NamedTuple):
 
 
 def paged_insert(cache: PagedLayerCache, kh: jax.Array, vh: jax.Array) -> PagedLayerCache:
-    """Insert one decode token (B, Hkv, 1, D) at each slot's ``length``.
+    """Insert t decode tokens (B, Hkv, t, D) at positions length..length+t-1.
 
-    Unmapped pages (freed slots) drop the write; per-slot page sets are
+    t == 1 is the classic decode insert; t == k is the speculative verify
+    insert (the k draft positions land in one scatter). Unmapped pages (freed
+    slots) and positions beyond the slot's table capacity map to the
+    out-of-range sentinel, so those writes drop; per-slot page sets are
     disjoint by allocator invariant, so the scatter has no collisions.
     """
-    bs = cache.k.shape[2]
-    pos = cache.length
-    blk = jnp.clip(pos // bs, 0, cache.block_table.shape[1] - 1)
-    page = jnp.take_along_axis(cache.block_table, blk[:, None], axis=1)[:, 0]
+    n, _, bs, _ = cache.k.shape
+    nb = cache.block_table.shape[1]
+    t = kh.shape[2]
+    pos = cache.length[:, None] + jnp.arange(t)[None, :]           # (B, t)
+    blk = jnp.clip(pos // bs, 0, nb - 1)
+    page = jnp.take_along_axis(cache.block_table, blk, axis=1)     # (B, t)
+    # positions past the table's capacity must not clamp into a REAL page
+    # (that would corrupt another slot's block) — send them out of bounds
+    page = jnp.where(pos < nb * bs, page, n)
     off = pos % bs
-    k_tok, v_tok = kh[:, :, 0], vh[:, :, 0]       # (B, Hkv, D)
+    k_tok = kh.transpose(0, 2, 1, 3)              # (B, t, Hkv, D)
+    v_tok = vh.transpose(0, 2, 1, 3)
     if cache.k_scale is not None:
         from ..serving.kv_quant import quantize_kv
 
@@ -69,12 +78,12 @@ def paged_insert(cache: PagedLayerCache, kh: jax.Array, vh: jax.Array) -> PagedL
             v=cache.v.at[page, :, off, :].set(v_q, mode="drop"),
             k_scale=cache.k_scale.at[page, :, off, :].set(k_s, mode="drop"),
             v_scale=cache.v_scale.at[page, :, off, :].set(v_s, mode="drop"),
-            length=cache.length + 1,
+            length=cache.length + t,
         )
     return cache._replace(
         k=cache.k.at[page, :, off, :].set(k_tok.astype(cache.k.dtype), mode="drop"),
         v=cache.v.at[page, :, off, :].set(v_tok.astype(cache.v.dtype), mode="drop"),
-        length=cache.length + 1,
+        length=cache.length + t,
     )
 
 
@@ -243,11 +252,9 @@ def attention_block(
         kh = k.transpose(0, 2, 1, 3)  # (B, Hkv, T, D)
         vh = v.transpose(0, 2, 1, 3)
         if isinstance(cache, PagedLayerCache):
-            if t != 1:
-                raise NotImplementedError(
-                    "paged cache is decode-only; serving prefills with "
-                    "cache=None and scatters whole blocks into the page pool"
-                )
+            # t == 1: classic paged decode; t == k: speculative verify — the
+            # k draft positions insert in one scatter and attend through the
+            # same block-table gather (query i sees keys <= length + i)
             new_cache = paged_insert(cache, kh, vh)
             kh, vh = paged_gather(new_cache)
         elif cache is not None:
@@ -275,7 +282,30 @@ def attention_block(
     qh = q.transpose(0, 2, 1, 3)  # (B, Hq, T, D)
 
     if cache is not None and kv_override is None:
-        if t > 1:
+        if (
+            isinstance(cache, PagedLayerCache)
+            and kernel_impl == "pallas"
+            and cache.k_scale is None
+        ):
+            # Pallas paged-decode kernels: the page gather happens in the DMA
+            # engine via the scalar-prefetched block table, not a jnp gather.
+            # t == 1 is the single-query decode kernel; t == k the k-query
+            # speculative-verify variant (query i attends keys <= length + i).
+            if t == 1:
+                from ..kernels.ops import paged_attention
+
+                out = paged_attention(
+                    qh[:, :, 0], new_cache.k, new_cache.v,
+                    new_cache.block_table, cache.length,
+                )[:, :, None, :]
+            else:
+                from ..kernels.ops import paged_attention_kquery
+
+                out = paged_attention_kquery(
+                    qh, new_cache.k, new_cache.v,
+                    new_cache.block_table, cache.length,
+                )
+        elif t > 1 and not isinstance(cache, PagedLayerCache):
             # chunked prefill into a cache: the dense masked-score path would
             # materialize (T, S) scores (34 GB/device measured on zamba2
             # prefill_32k) — use the flash path with a causal offset so query
@@ -290,21 +320,9 @@ def attention_block(
             out = flash_attention_jax(
                 qh, kh, vh, True, q_block, kv_block, cache.length, "full"
             )
-        elif (
-            isinstance(cache, PagedLayerCache)
-            and kernel_impl == "pallas"
-            and cache.k_scale is None
-        ):
-            # Pallas paged-decode kernel: the page gather happens in the DMA
-            # engine via the scalar-prefetched block table, not a jnp gather
-            from ..kernels.ops import paged_attention
-
-            out = paged_attention(
-                qh[:, :, 0], new_cache.k, new_cache.v,
-                new_cache.block_table, cache.length,
-            )[:, :, None, :]
         else:
-            # single-token decode: O(S) masked einsum
+            # single-token decode (and k-token paged verify): O(t*S) masked
+            # einsum — query i of slot b attends keys <= length[b] + i
             s = kh.shape[2]
             scale = 1.0 / np.sqrt(head_dim)
             group = n_heads // n_kv

@@ -38,6 +38,7 @@ fallback for cache families without per-slot lengths (ssm/hybrid/encdec).
 """
 from __future__ import annotations
 
+import logging
 import time
 from dataclasses import dataclass, field
 
@@ -47,6 +48,8 @@ import numpy as np
 
 from ..models import model as model_lib
 from ..models import transformer as transformer_lib
+
+log = logging.getLogger(__name__)
 
 BATCHED_FAMILIES = ("dense", "moe", "vlm")  # cache families with per-slot lengths
 
@@ -64,6 +67,12 @@ class RequestRejected(ValueError):
     """Raised by ``submit`` when a request can never be served by this engine
     (too long for the cache, or larger than the whole page pool). A graceful
     error path — the engine keeps serving everything already accepted."""
+
+
+class EngineCapabilityError(RequestRejected):
+    """A paged-only feature (quantized KV pages, speculative decoding) was
+    requested on an engine/cache family that cannot provide it. Subclasses
+    :class:`RequestRejected` so callers handle both through one error path."""
 
 
 def _validate_request(prompt: list[int], max_new_tokens: int, max_len: int):
@@ -108,6 +117,14 @@ class EngineConfig:
     evict_policy: str = "longest_remaining"  # or "lru"
     decode_reserve: int | None = None  # decode headroom (tokens) required to admit;
     #                                    None = one block
+    # speculative engine only (serving/speculative.py):
+    spec_k: int = 0                 # draft tokens per tick; 0 = speculation off
+    spec_adaptive: bool = False     # adapt k from observed acceptance rate
+    spec_draft_mode: str = "auto"   # auto | parallel (greedy lookahead draft)
+    #                                 | sequential (autoregressive proposals)
+    spec_draft_kv_dtype: str = "bfloat16"  # draft page-pool payload (its own,
+    #                                        smaller pool; never affects the
+    #                                        target distribution)
 
 
 def _as_params(params_or_deployed):
@@ -116,9 +133,19 @@ def _as_params(params_or_deployed):
         if hasattr(params_or_deployed, "fmt") else params_or_deployed
 
 
+def decode_emitted_tokens(done: list[Request]) -> int:
+    """Tokens these requests emitted from DECODE steps: every (re-)admission
+    emits its first token from the prefill program, the rest amortize over
+    decode calls. The convention lives here so benchmark/launcher metrics
+    (tokens-per-step) cannot drift from the engines that define it."""
+    return sum(len(r.out_tokens) - 1 - r.evictions for r in done)
+
+
 class ServingEngine:
     """Single-host batched slot-padded engine; the multi-pod path swaps the
     jitted fns for their pjit'd versions (same signatures — launch/serve.py)."""
+
+    _speculative = False   # only serving.speculative.SpeculativeEngine drafts
 
     def __init__(self, arch_cfg, params, ecfg: EngineConfig = EngineConfig()):
         self._init_common(arch_cfg, params, ecfg)
@@ -142,6 +169,13 @@ class ServingEngine:
             raise ValueError(
                 f"batched engine needs a KV-cache family, got {arch_cfg.family!r};"
                 " use ReferenceEngine for ssm/hybrid/encdec"
+            )
+        if ecfg.spec_k and not self._speculative:
+            # never silently drop a requested feature: spec_k is only
+            # consumed by serving.speculative.SpeculativeEngine
+            raise EngineCapabilityError(
+                f"{type(self).__name__} does not speculate "
+                f"(spec_k={ecfg.spec_k} requested); use SpeculativeEngine"
             )
         if ecfg.kv_dtype not in _KV_DTYPES and ecfg.kv_dtype != "int8":
             raise ValueError(f"unknown kv_dtype {ecfg.kv_dtype!r}")
@@ -194,16 +228,24 @@ class ServingEngine:
 
     # ----------------------------------------------------- device programs ---
 
-    def _sample(self, logits: jax.Array, step: jax.Array, salt: int) -> jax.Array:
+    def _sample(self, logits: jax.Array, step: jax.Array, salt: int,
+                slots: jax.Array | None = None) -> jax.Array:
         """Greedy or temperature sampling, on device. logits: (S, vocab).
 
-        ``salt`` separates the prefill and decode streams — both can sample
-        within the same engine tick and must not share gumbel noise.
+        ``salt`` separates the prefill / decode / draft / verify streams — all
+        can sample within the same engine tick and must not share gumbel
+        noise. Each row additionally folds its slot id (``slots``; default row
+        index) into the key, so slots carry independent streams: eviction /
+        re-prefill resume and draft-vs-verify sampling never correlate across
+        slots. The greedy path is untouched.
         """
         if self.ecfg.greedy or self.ecfg.temperature <= 0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         key = jax.random.fold_in(jax.random.fold_in(self._base_key, step), salt)
-        g = jax.random.gumbel(key, logits.shape)
+        if slots is None:
+            slots = jnp.arange(logits.shape[0])
+        keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(slots)
+        g = jax.vmap(lambda k: jax.random.gumbel(k, logits.shape[-1:]))(keys)
         return jnp.argmax(logits / self.ecfg.temperature + g, axis=-1).astype(jnp.int32)
 
     def _decode_fn(self, params, tokens, cache, active, step):
@@ -229,7 +271,7 @@ class ServingEngine:
         new_len = cache.length.at[slot_ids].set(lengths, mode="drop")
         # the logits at the last prompt position yield the first generated token
         last = jnp.take_along_axis(logits, (lengths - 1)[:, None, None], axis=1)
-        first_tok = self._sample(last[:, 0], step, salt=1)
+        first_tok = self._sample(last[:, 0], step, salt=1, slots=slot_ids)
         return first_tok, cache._replace(k=k, v=v, length=new_len)
 
     # ------------------------------------------------------------- steps ---
@@ -311,9 +353,18 @@ class ServingEngine:
         if not self._active:
             return done
         active = np.zeros((s,), bool)
-        tokens = np.zeros((s, 1), np.int32)
         for slot in self._active:
             active[slot] = True
+        self._decode_tick(active, free, done)
+        return done
+
+    def _decode_tick(self, active: np.ndarray, free: list[int],
+                     done: list[Request]):
+        """Device portion of a tick (hook: the speculative engine replaces
+        this with its draft + k-wide verify program)."""
+        s = self.ecfg.max_slots
+        tokens = np.zeros((s, 1), np.int32)
+        for slot in self._active:
             tokens[slot, 0] = self._last_token[slot]
         nxt, self.cache = self._decode(
             self.params, jnp.asarray(tokens), self._device_cache(),
@@ -323,7 +374,6 @@ class ServingEngine:
         toks = np.asarray(nxt)               # ONE host sync per step
         for slot, req in list(self._active.items()):
             self._record(slot, req, int(toks[slot]), free, done)
-        return done
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         """Drive everything to completion (batch mode)."""
@@ -440,7 +490,7 @@ class PagedServingEngine(ServingEngine):
         cache = transformer_lib.scatter_prefill_pages(cache, kvs, page_map)
         new_len = cache.length.at[slot_ids].set(lengths, mode="drop")
         last = jnp.take_along_axis(logits, (lengths - 1)[:, None, None], axis=1)
-        first_tok = self._sample(last[:, 0], step, salt=1)
+        first_tok = self._sample(last[:, 0], step, salt=1, slots=slot_ids)
         return first_tok, cache._replace(length=new_len)
 
     # ------------------------------------------------------------- steps ---
@@ -490,26 +540,35 @@ class PagedServingEngine(ServingEngine):
             slot_ids[i] = slot
             prompt_blocks = -(-plen // self._bs)
             page_map[i, :prompt_blocks] = pages[:prompt_blocks]
+        firsts = self._prefill_admitted(tokens, lengths, slot_ids, page_map, step)
+        for i, (slot, req, _, _) in enumerate(admitted):
+            self._record(slot, req, int(firsts[i]), free, done)
+
+    def _prefill_admitted(self, tokens, lengths, slot_ids, page_map, step):
+        """Device portion of admission (hook: the speculative engine also
+        prefills the draft page pools here). Returns first tokens (host)."""
         first, self.cache = self._prefill(
             self.params, jnp.asarray(tokens), jnp.asarray(lengths),
             jnp.asarray(slot_ids), jnp.asarray(page_map), self.cache,
             jnp.asarray(step, jnp.int32),
         )
         self.prefill_calls += 1
-        firsts = np.asarray(first)
-        for i, (slot, req, _, _) in enumerate(admitted):
-            self._record(slot, req, int(firsts[i]), free, done)
+        return np.asarray(first)
 
     def _pre_decode(self, free: list[int], done: list[Request]):
-        """Grow each active slot's pages to cover this tick's KV write; evict
+        """Grow each active slot's pages to cover this tick's KV writes; evict
         when the pool is dry. The next decode writes the KV of the latest
-        sampled token at position len(prompt) + len(out) - 1."""
+        sampled token at position len(prompt) + len(out) - 1; the speculative
+        engine widens the window (``_write_window`` > 1) to cover all k draft
+        positions. Writes past the table's capacity drop device-side, so the
+        need is capped at the table width."""
+        window = getattr(self, "_write_window", 1)
         for slot in list(self._active):
             req = self._active.get(slot)
             if req is None:
                 continue
-            write_pos = len(req.prompt) + len(req.out_tokens) - 1
-            need = write_pos // self._bs + 1
+            write_pos = len(req.prompt) + len(req.out_tokens) - 1 + (window - 1)
+            need = min(write_pos // self._bs + 1, self._nb_slot)
             while slot in self._active and len(self._pages[slot]) < need:
                 page = self.allocator.alloc(1)
                 if page is not None:
@@ -569,6 +628,23 @@ class ReferenceEngine:
     """
 
     def __init__(self, arch_cfg, params, ecfg: EngineConfig = EngineConfig()):
+        missing = []
+        if ecfg.kv_dtype != "float32":
+            missing.append(f"kv_dtype={ecfg.kv_dtype!r}")
+        if ecfg.spec_k:
+            missing.append(f"speculative decoding (spec_k={ecfg.spec_k})")
+        if missing:
+            raise EngineCapabilityError(
+                f"family {arch_cfg.family!r} serves through ReferenceEngine "
+                f"(per-slot loop, contiguous float32 cache); paged-only "
+                f"feature(s) requested: {', '.join(missing)}"
+            )
+        log.info(
+            "ReferenceEngine serving family %r: per-slot per-token loop, "
+            "contiguous float32 cache — no paged features (kv_dtype, "
+            "speculation, eviction/resume)",
+            arch_cfg.family,
+        )
         self.cfg = arch_cfg
         self.ecfg = ecfg
         deployed = _as_params(params)

@@ -48,6 +48,9 @@ class SLRLinear:
         """y = x @ (L + S)."""
         if kernel is None:
             kernel = self.use_kernel
+        if self.p is None and self.s_coo is None and self.s_bsr is None:
+            # fully-truncated block (extreme HPA budgets): y = x @ 0
+            return jnp.zeros((*x.shape[:-1], self.shape[1]), x.dtype)
         y = 0.0
         if self.p is not None:
             if kernel:
@@ -148,16 +151,22 @@ def build_slr_linears(
     for info in blocks:
         blk = state[info.name]
         p, vt = _live_rank_slice(blk, info)
+        # an HPA budget that removed every sparse entry (e.g. kappa -> 0, the
+        # pure-low-rank end of the spectrum) must not keep paying the dense
+        # COO scatter at every apply — drop the empty S at build time
+        s_coo = blk.s_coo
+        if int(np.sum(np.asarray(s_coo.idx) >= 0)) == 0:
+            s_coo = None
         if fmt == "bsr" and not info.stack_dims:
-            s_bsr = coo_to_bsr(blk.s_coo, bsr_block)
+            s_bsr = coo_to_bsr(blk.s_coo, bsr_block) if s_coo is not None else None
             # keep the COO view too: apply(kernel=False) is the XLA/GSPMD
             # fallback and must include the sparse part
             out[info.name] = SLRLinear(
-                p=p, vt=vt, s_coo=blk.s_coo, s_bsr=s_bsr, shape=(info.n, info.m)
+                p=p, vt=vt, s_coo=s_coo, s_bsr=s_bsr, shape=(info.n, info.m)
             )
         else:
             out[info.name] = SLRLinear(
-                p=p, vt=vt, s_coo=blk.s_coo, s_bsr=None, shape=(info.n, info.m)
+                p=p, vt=vt, s_coo=s_coo, s_bsr=None, shape=(info.n, info.m)
             )
     return out
 
