@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-latency bench-spec serve-demo
+.PHONY: test bench-smoke bench bench-latency bench-prefill bench-spec serve-demo
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -14,6 +14,11 @@ bench-smoke:
 # latency SLO harness: paged vs slot-padded engine under Poisson arrivals
 bench-latency:
 	$(PYTHON) -m benchmarks.serve_latency --quick
+
+# chunked prefill: mixed long/short-prompt workload, one-shot vs chunked
+# prefill on the paged engine (short-request tail ITL is the headline)
+bench-prefill:
+	$(PYTHON) -m benchmarks.serve_latency --mixed --quick
 
 # speculative decode: elastic low-budget draft vs the paged engine
 bench-spec:

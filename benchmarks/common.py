@@ -112,6 +112,7 @@ def engine_provenance(engine) -> dict:
         "num_blocks": getattr(engine, "num_blocks", None),
         "kv_dtype": e.kv_dtype,
         "evict_policy": e.evict_policy,
+        "prefill_chunk": getattr(e, "prefill_chunk", None),
         "greedy": e.greedy,
     }
     if getattr(e, "spec_k", 0):

@@ -72,10 +72,15 @@ def paged_attention(q, k_pages, v_pages, block_table, lengths,
 
 
 def paged_attention_kquery(q, k_pages, v_pages, block_table, lengths,
-                           interpret: bool | None = None):
+                           interpret: bool | None = None,
+                           q_tile: int | None = None):
+    """Multi-query paged attention: the speculative-verify window (kq = draft
+    k) and chunked-prefill chunks (kq = prefill_chunk) share this kernel —
+    wide windows tile the query axis across the grid (``q_tile``)."""
     return paged_attention_kquery_pallas(
         q, k_pages, v_pages, block_table, lengths,
         interpret=_auto_interpret() if interpret is None else interpret,
+        q_tile=q_tile,
     )
 
 

@@ -18,11 +18,17 @@ Interpret mode (the CPU default via ``kernels.ops``) is the validation and
 container fallback path; on TPU hardware prefer ``block_size`` a multiple of
 128 so page tiles align with the MXU.
 
-``paged_attention_kquery_pallas`` is the speculative-verify variant: each slot
+``paged_attention_kquery_pallas`` is the multi-query variant: each slot
 carries ``kq`` queries at consecutive positions ``length .. length + kq - 1``
-(the just-inserted draft window). Same grid and online-softmax structure; the
-query block is ``(kq * group, D)`` with a per-row position mask, so one kernel
-invocation verifies all draft positions of all slots.
+— the just-inserted speculative-verify window (kq = draft k) or a chunked-
+prefill chunk (kq = prefill_chunk, which can span many pages). Same
+online-softmax structure with a per-row position mask; the query axis is
+TILED (grid ``(B * Hkv, kq / q_tile, pages_per_slot)``) so chunk-width
+windows never need a ``(kq * group, bs)`` score tile in VMEM — each query
+tile carries its own running (max, denom, acc) scratch across the slot's
+pages, and ``kq`` pads up to the tile multiple (padded rows compute junk that
+is sliced off host-side; their positions sit past the valid window so they
+only ever widen the page-skip bound).
 """
 from __future__ import annotations
 
@@ -143,12 +149,14 @@ def paged_attention_pallas(
 
 def _kquery_kernel(
     tables_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-    *, scale, bs, nb, n_kv, kq, group, table_len,
+    *, scale, bs, nb, n_kv, q_tile, group, table_len,
 ):
     # tables layout: [block_table (B * nb,), lengths (B,)]
     bh = pl.program_id(0)
-    i = pl.program_id(1)
+    qt = pl.program_id(1)
+    i = pl.program_id(2)
     b = bh // n_kv
+    rows = q_tile * group
 
     @pl.when(i == 0)
     def init():
@@ -157,17 +165,19 @@ def _kquery_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     length = tables_ref[table_len + b]
+    q0 = qt * q_tile     # first query index of this tile
 
-    # query row r = qi * group + g sits at position length + qi; the page
-    # holds visible keys for SOME row iff i * bs <= length + kq - 1
-    @pl.when(i * bs <= length + kq - 1)
+    # query row r = qi * group + g sits at position length + q0 + qi; the page
+    # holds visible keys for SOME row of the tile iff
+    # i * bs <= length + q0 + q_tile - 1
+    @pl.when(i * bs <= length + q0 + q_tile - 1)
     def page():
-        q = q_ref[0].astype(jnp.float32) * scale        # (kq * group, D)
+        q = q_ref[0].astype(jnp.float32) * scale        # (rows, D)
         k = k_ref[0, 0].astype(jnp.float32)             # (bs, D)
         v = v_ref[0, 0].astype(jnp.float32)
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (kq*group, bs)
-        pos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (kq * group, bs), 1)
-        qi = jax.lax.broadcasted_iota(jnp.int32, (kq * group, bs), 0) // group
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (rows, bs)
+        pos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (rows, bs), 1)
+        qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (rows, bs), 0) // group
         s = jnp.where(pos <= length + qi, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
@@ -184,15 +194,24 @@ def _kquery_kernel(
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+# per-tile query rows beyond which the query axis splits into grid tiles:
+# bounds the (rows, bs) score block and the running-softmax scratch in VMEM
+# however wide the chunked-prefill window grows
+_MAX_Q_ROWS = 128
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "q_tile"))
 def paged_attention_kquery_pallas(
     q: jax.Array,            # (B, Hq, kq, D) — kq queries per slot, positions
-    #                          length .. length + kq - 1 (draft verify window)
+    #                          length .. length + kq - 1 (speculative-verify
+    #                          window or chunked-prefill chunk)
     k_pages: jax.Array,      # (num_pages, Hkv, bs, D) page pool
     v_pages: jax.Array,
     block_table: jax.Array,  # (B, pages_per_slot) int32
     lengths: jax.Array,      # (B,) int32 pre-insert valid length per slot
     interpret: bool = True,
+    q_tile: int | None = None,  # queries per grid tile; None = auto (whole
+    #                             window while kq * group <= _MAX_Q_ROWS)
 ) -> jax.Array:
     b, hq, kq, d = q.shape
     n, hkv, bs, _ = k_pages.shape
@@ -201,46 +220,61 @@ def paged_attention_kquery_pallas(
     nb = block_table.shape[1]
     scale = 1.0 / (d ** 0.5)
 
+    if q_tile is None:
+        q_tile = kq if kq * group <= _MAX_Q_ROWS else max(_MAX_Q_ROWS // group, 1)
+    q_tile = max(min(q_tile, kq), 1)
+    kq_pad = -(-kq // q_tile) * q_tile
+    if kq_pad != kq:
+        # padded queries sit at positions length + kq .. length + kq_pad - 1:
+        # past the valid window, so they only widen the page-skip bound of the
+        # last tile; their junk output rows are sliced off below
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, kq_pad - kq), (0, 0)))
+    nq = kq_pad // q_tile
+
     # rows ordered query-major: row = qi * group + g
-    qf = q.reshape(b, hkv, group, kq, d).transpose(0, 1, 3, 2, 4)
-    qf = qf.reshape(b * hkv, kq * group, d)
+    qf = q.reshape(b, hkv, group, kq_pad, d).transpose(0, 1, 3, 2, 4)
+    qf = qf.reshape(b * hkv, kq_pad * group, d)
     tables = jnp.concatenate(
         [jnp.minimum(block_table, n - 1).reshape(-1), lengths]
     ).astype(jnp.int32)
 
     kernel = functools.partial(
-        _kquery_kernel, scale=scale, bs=bs, nb=nb, n_kv=hkv, kq=kq,
+        _kquery_kernel, scale=scale, bs=bs, nb=nb, n_kv=hkv, q_tile=q_tile,
         group=group, table_len=b * nb,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(b * hkv, nb),
+        grid=(b * hkv, nq, nb),
         in_specs=[
-            pl.BlockSpec((1, kq * group, d), lambda bh, i, t: (bh, 0, 0)),
             pl.BlockSpec(
-                (1, 1, bs, d),
-                lambda bh, i, t: (t[(bh // hkv) * nb + i], bh % hkv, 0, 0),
+                (1, q_tile * group, d), lambda bh, qt, i, t: (bh, qt, 0)
             ),
             pl.BlockSpec(
                 (1, 1, bs, d),
-                lambda bh, i, t: (t[(bh // hkv) * nb + i], bh % hkv, 0, 0),
+                lambda bh, qt, i, t: (t[(bh // hkv) * nb + i], bh % hkv, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bs, d),
+                lambda bh, qt, i, t: (t[(bh // hkv) * nb + i], bh % hkv, 0, 0),
             ),
         ],
-        out_specs=pl.BlockSpec((1, kq * group, d), lambda bh, i, t: (bh, 0, 0)),
+        out_specs=pl.BlockSpec(
+            (1, q_tile * group, d), lambda bh, qt, i, t: (bh, qt, 0)
+        ),
         scratch_shapes=[
-            pltpu.VMEM((kq * group, 1), jnp.float32),
-            pltpu.VMEM((kq * group, 1), jnp.float32),
-            pltpu.VMEM((kq * group, d), jnp.float32),
+            pltpu.VMEM((q_tile * group, 1), jnp.float32),
+            pltpu.VMEM((q_tile * group, 1), jnp.float32),
+            pltpu.VMEM((q_tile * group, d), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b * hkv, kq * group, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, kq_pad * group, d), q.dtype),
         interpret=interpret,
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
+            dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
     )(tables, qf, k_pages, v_pages)
-    out = out.reshape(b, hkv, kq, group, d).transpose(0, 1, 3, 2, 4)
-    return out.reshape(b, hq, kq, d)
+    out = out.reshape(b, hkv, kq_pad, group, d).transpose(0, 1, 3, 2, 4)
+    return out.reshape(b, hq, kq_pad, d)[:, :, :kq]

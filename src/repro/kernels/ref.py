@@ -63,10 +63,12 @@ def paged_attention_kquery_ref(
     block_table: jax.Array,  # (B, pages_per_slot) int32; >= num_pages unmapped
     lengths: jax.Array,      # (B,) pre-insert valid length per slot
 ) -> jax.Array:
-    """k-query paged attention oracle (speculative-verify window).
+    """k-query paged attention oracle (speculative-verify window AND
+    chunked-prefill chunks — the kernel's query tiling must be invisible, so
+    this oracle is deliberately tiling-free).
 
     Query i of slot b sits at position ``lengths[b] + i`` (the KV of all kq
-    verify tokens is already in the pool), so it sees keys at positions
+    window tokens is already in the pool), so it sees keys at positions
     <= lengths[b] + i.
     """
     n, hkv, bs, d = k_pages.shape

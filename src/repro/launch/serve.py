@@ -45,16 +45,19 @@ ENGINES = {
 def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
                 slo_ms: float | None = None) -> dict:
     rng = np.random.RandomState(seed)
-    submitted = time.time()
+    submitted = time.time()          # deadlines are a wall-clock contract
     for _ in range(requests):
         prompt = rng.randint(0, vocab, size=rng.randint(2, 8)).tolist()
         engine.submit(
             prompt, max_new_tokens=max_new,
             deadline=None if slo_ms is None else submitted + slo_ms / 1e3,
         )
-    t0 = time.time()
+    # engine timestamps (first_token_at etc.) are time.monotonic() values, so
+    # latency math must use the same clock — an NTP step mid-run would
+    # otherwise produce negative TTFT
+    t0 = time.monotonic()
     done = engine.run()
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     total_tokens = sum(len(r.out_tokens) for r in done)
     stats = {
         "requests": len(done),
@@ -101,6 +104,10 @@ def main():
                     help="KV page size in tokens (paged engine)")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="KV page pool size; None = max_slots * max_len worth")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: process prompts in block-aligned "
+                         "chunks of this many tokens interleaved with decode "
+                         "ticks (paged engine; None = one-shot prefill)")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="TTFT SLO; reports attainment and sets request deadlines")
     ap.add_argument("--kv-dtype", default="float32",
@@ -153,7 +160,7 @@ def main():
     ecfg = EngineConfig(
         max_slots=args.max_slots, max_len=args.max_len,
         block_size=args.block_size, num_blocks=args.num_blocks,
-        kv_dtype=args.kv_dtype,
+        kv_dtype=args.kv_dtype, prefill_chunk=args.prefill_chunk,
         spec_k=spec_k, spec_adaptive=args.spec_adaptive,
     )
 

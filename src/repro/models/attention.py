@@ -51,10 +51,12 @@ def paged_insert(cache: PagedLayerCache, kh: jax.Array, vh: jax.Array) -> PagedL
     """Insert t decode tokens (B, Hkv, t, D) at positions length..length+t-1.
 
     t == 1 is the classic decode insert; t == k is the speculative verify
-    insert (the k draft positions land in one scatter). Unmapped pages (freed
-    slots) and positions beyond the slot's table capacity map to the
-    out-of-range sentinel, so those writes drop; per-slot page sets are
-    disjoint by allocator invariant, so the scatter has no collisions.
+    insert (the k draft positions land in one scatter); t == chunk is the
+    chunked-prefill insert (the chunk scatters in at the slot's current
+    length). Unmapped pages (freed slots) and positions beyond the slot's
+    table capacity map to the out-of-range sentinel, so those writes drop;
+    per-slot page sets are disjoint by allocator invariant, so the scatter
+    has no collisions.
     """
     n, _, bs, _ = cache.k.shape
     nb = cache.block_table.shape[1]
@@ -138,12 +140,14 @@ def blockwise_attention(
     causal: bool = True,
     q_block: int = 512,
     kv_block: int = 1024,
-    causal_offset: int = 0,
+    causal_offset: jax.Array | int = 0,
 ) -> jax.Array:
     """Flash-style attention in pure jnp; O(T*D) memory, scores never stored.
 
     ``causal_offset``: query position i attends to keys <= i + offset (used
-    when T < S, e.g. chunked prefill against a longer cache).
+    when T < S, e.g. chunked prefill against a longer cache). A scalar applies
+    one offset to every row; a ``(B,)`` vector gives each batch row its own
+    offset — chunked prefill over a batch of slots at ragged lengths.
     """
     b, hq, t, d = q.shape
     _, hkv, s, _ = k.shape
@@ -168,6 +172,7 @@ def blockwise_attention(
     q_pos = jnp.arange(tq).reshape(nq, bq)
     k_pos = jnp.arange(sk).reshape(nk, bk)
     valid_k = (k_pos < s)  # padding mask (nk, bk)
+    offset = jnp.asarray(causal_offset)
 
     def q_step(_, qi):
         q_i = qb[:, :, :, qi]          # (b, hkv, group, bq, d)
@@ -180,8 +185,15 @@ def blockwise_attention(
             sc = jnp.einsum("bhgqd,bhkd->bhgqk", q_i, k_i)
             mask = valid_k[ki][None, None, None, None, :]
             if causal:
-                cm = (qp[:, None] + causal_offset) >= k_pos[ki][None, :]
-                mask = jnp.logical_and(mask, cm[None, None, None])
+                if offset.ndim:         # per-slot offsets: (b, bq, bk) mask
+                    cm = (qp[None, :, None] + offset[:, None, None]) \
+                        >= k_pos[ki][None, None, :]
+                    cm = cm[:, None, None]
+                else:
+                    cm = ((qp[:, None] + offset) >= k_pos[ki][None, :])[
+                        None, None, None
+                    ]
+                mask = jnp.logical_and(mask, cm)
             sc = jnp.where(mask, sc, NEG_INF)
             m_cur = jnp.max(sc, axis=-1, keepdims=True)
             m_new = jnp.maximum(m, m_cur)
@@ -252,9 +264,10 @@ def attention_block(
         kh = k.transpose(0, 2, 1, 3)  # (B, Hkv, T, D)
         vh = v.transpose(0, 2, 1, 3)
         if isinstance(cache, PagedLayerCache):
-            # t == 1: classic paged decode; t == k: speculative verify — the
-            # k draft positions insert in one scatter and attend through the
-            # same block-table gather (query i sees keys <= length + i)
+            # t == 1: classic paged decode; t == k: speculative verify;
+            # t == chunk: chunked prefill — the t positions insert in one
+            # scatter and attend through the same block-table gather
+            # (query i sees keys <= length + i)
             new_cache = paged_insert(cache, kh, vh)
             kh, vh = paged_gather(new_cache)
         elif cache is not None:
@@ -268,9 +281,15 @@ def attention_block(
                 )
             else:
                 # per-slot lengths (batched serving): each sequence inserts at
-                # its own write position — vmapped slice-update over batch
+                # its own write position — vmapped scatter with mode='drop' so
+                # rows past the buffer end are DROPPED per-position (a
+                # dynamic_update_slice would clamp the whole write start back
+                # into the valid region when length + t > max_len, silently
+                # shifting a ragged chunk's tail over valid history)
                 ins = jax.vmap(
-                    lambda ck, kn, pos: jax.lax.dynamic_update_slice(ck, kn, (0, pos, 0))
+                    lambda ck, kn, pos: ck.at[
+                        :, pos + jnp.arange(kn.shape[1]), :
+                    ].set(kn, mode="drop")
                 )
                 kc = ins(cache.k, kh.astype(cache.k.dtype), cache.length)
                 vc = ins(cache.v, vh.astype(cache.v.dtype), cache.length)
@@ -289,8 +308,9 @@ def attention_block(
         ):
             # Pallas paged-decode kernels: the page gather happens in the DMA
             # engine via the scalar-prefetched block table, not a jnp gather.
-            # t == 1 is the single-query decode kernel; t == k the k-query
-            # speculative-verify variant (query i attends keys <= length + i).
+            # t == 1 is the single-query decode kernel; t > 1 the multi-query
+            # variant (query i attends keys <= length + i) serving both the
+            # k-wide speculative verify and chunk-wide chunked prefill.
             if t == 1:
                 from ..kernels.ops import paged_attention
 
@@ -311,15 +331,20 @@ def attention_block(
             # prefill_32k) — use the flash path with a causal offset so query
             # i attends keys <= cache.length + i.
             if jnp.ndim(cache.length) != 0:
-                raise NotImplementedError(
-                    "chunked prefill against a per-slot-length cache; batched "
-                    "serving prefills with cache=None and scatters into slots"
+                # per-slot lengths (batched serving): each slot's chunk sits
+                # at its own offset — blockwise path with a (B,) causal
+                # offset; forward-only here, so the custom-VJP wrapper is
+                # unnecessary
+                out = blockwise_attention(
+                    qh, kh, vh, causal=True, q_block=q_block,
+                    kv_block=kv_block, causal_offset=cache.length,
                 )
-            from .flash_vjp import flash_attention_jax
+            else:
+                from .flash_vjp import flash_attention_jax
 
-            out = flash_attention_jax(
-                qh, kh, vh, True, q_block, kv_block, cache.length, "full"
-            )
+                out = flash_attention_jax(
+                    qh, kh, vh, True, q_block, kv_block, cache.length, "full"
+                )
         else:
             # single-token decode (and k-token paged verify): O(t*S) masked
             # einsum — query i of slot b attends keys <= length[b] + i

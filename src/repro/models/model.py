@@ -127,6 +127,36 @@ def decode_step(params, token: jax.Array, cache, cfg: ArchConfig):
     return logits, new_cache
 
 
+def chunk_prefill_step(params, tokens: jax.Array, counts: jax.Array, cache,
+                       cfg: ArchConfig):
+    """One chunked-prefill step: process a ``(B, C)`` token chunk against an
+    existing cache at each slot's current length.
+
+    Per slot b the chunk's KV lands at positions ``length[b] ..
+    length[b] + C - 1`` (paged: scattered into pages through the block table;
+    contiguous: vmapped slice insert) and query i attends keys ``<= length[b]
+    + i`` — history plus the causal prefix of the chunk itself. Rows may be
+    RAGGED: only ``counts[b]`` leading tokens are valid, and lengths advance
+    by ``counts`` (not C), so the padded tail wrote junk KV past the valid
+    prefix — never attended (length-masked) and overwritten by the next real
+    insert at the same positions. ``counts[b] == 0`` rows are pure padding.
+
+    Returns ``(logits (B, C, vocab), new_cache)``; the last VALID position's
+    logits (``logits[b, counts[b] - 1]``) continue the sequence. Chaining
+    chunks over an empty cache reproduces one-shot prefill exactly
+    (tests/test_chunked_prefill.py asserts bitwise equality).
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"chunked prefill needs a KV-cache family, got {cfg.family!r}"
+        )
+    n0 = cache.length
+    logits, new_cache, _ = _forward(
+        params, {"tokens": tokens}, cfg, cache=cache, position_offset=n0
+    )
+    return logits, new_cache._replace(length=n0 + counts)
+
+
 def init_paged_cache(
     cfg: ArchConfig,
     max_slots: int,

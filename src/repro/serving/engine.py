@@ -21,10 +21,25 @@ gather, or the Pallas ``kernels/paged_attention.py`` kernel under
 ``kernel_impl='pallas'``); ``kv_dtype='int8'`` stores pages quantized via
 ``serving/kv_quant.py``.
 
+Chunked prefill (``EngineConfig.prefill_chunk``, paged engine only): prompt
+processing is split into block-aligned chunks interleaved with decode ticks.
+Each tick advances every mid-prefill slot by at most ONE chunk (a single
+jitted ``(S, chunk)`` program over the paged cache — the chunk's queries
+attend previously written pages, its KV scatters in at the slot's current
+length), so a long prompt no longer head-of-line-blocks active decoders, and
+eviction-resume re-prefills its prompt + generated history chunk-by-chunk
+instead of in one monolithic call. A slot whose next chunk cannot get pages
+simply stalls and resumes from the last completed chunk once pages free up.
+Greedy output is bitwise-identical to one-shot prefill
+(tests/test_chunked_prefill.py).
+
 Device programs (all shapes static, so serving never recompiles):
   * ``prefill[bucket]`` — batched prompt forward; KV rows (slot-padded) or
     whole prompt blocks (paged) and the first sampled token scatter into
     place inside the same jitted call
+  * ``chunk`` — (params, tokens (S, chunk), counts (S,), slot_ids, cache,
+    step) -> (first_tokens (S,), cache); at most ONE call per tick covering
+    every mid-prefill slot (chunked mode replaces ``prefill`` entirely)
   * ``decode`` — (params, tokens (S, 1), cache, active (S,), step)
     -> (next_tokens (S,), cache); ONE call per engine tick
 
@@ -50,6 +65,12 @@ from ..models import model as model_lib
 from ..models import transformer as transformer_lib
 
 log = logging.getLogger(__name__)
+
+# All INTERNAL timestamps (submitted_at, admitted_at, first_token_at,
+# token_times, finished_at) use the monotonic clock: an NTP step during a run
+# must never yield a negative TTFT/ITL. Only ``Request.deadline`` stays on the
+# wall clock — it is an absolute SLO contract handed in by the caller.
+_now = time.monotonic
 
 BATCHED_FAMILIES = ("dense", "moe", "vlm")  # cache families with per-slot lengths
 
@@ -92,13 +113,19 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: list[int] = field(default_factory=list)
     done: bool = False
+    # timestamps below are time.monotonic() values (see _now above) — compare
+    # them to each other, never to the wall clock
     submitted_at: float = 0.0
     admitted_at: float = 0.0
     first_token_at: float = 0.0      # TTFT = first_token_at - submitted_at
     finished_at: float = 0.0
     token_times: list[float] = field(default_factory=list)
-    deadline: float | None = None    # absolute wall-clock SLO deadline
+    deadline: float | None = None    # absolute WALL-CLOCK SLO deadline
     evictions: int = 0
+    # tokens this request emitted from a PREFILL/CHUNK program (one per
+    # admission that reached the end of its prompt; a mid-prefill eviction
+    # emits nothing, so this is NOT simply 1 + evictions)
+    prefill_emitted: int = 0
 
 
 @dataclass
@@ -117,6 +144,12 @@ class EngineConfig:
     evict_policy: str = "longest_remaining"  # or "lru"
     decode_reserve: int | None = None  # decode headroom (tokens) required to admit;
     #                                    None = one block
+    prefill_chunk: int | None = None   # paged engine only: split prompt
+    #                                    processing into block-aligned chunks of
+    #                                    this many tokens, interleaved with
+    #                                    decode ticks (None = one-shot prefill;
+    #                                    must be a positive multiple of
+    #                                    block_size)
     # speculative engine only (serving/speculative.py):
     spec_k: int = 0                 # draft tokens per tick; 0 = speculation off
     spec_adaptive: bool = False     # adapt k from observed acceptance rate
@@ -135,10 +168,13 @@ def _as_params(params_or_deployed):
 
 def decode_emitted_tokens(done: list[Request]) -> int:
     """Tokens these requests emitted from DECODE steps: every (re-)admission
-    emits its first token from the prefill program, the rest amortize over
-    decode calls. The convention lives here so benchmark/launcher metrics
-    (tokens-per-step) cannot drift from the engines that define it."""
-    return sum(len(r.out_tokens) - 1 - r.evictions for r in done)
+    that completes its prefill emits one token from the prefill/chunk program,
+    the rest amortize over decode calls. Counted via ``Request.
+    prefill_emitted`` rather than ``1 + evictions`` because an eviction that
+    lands MID-PREFILL emits nothing for that admission (chunked prefill made
+    that state reachable). The convention lives here so benchmark/launcher
+    metrics (tokens-per-step) cannot drift from the engines that define it."""
+    return sum(len(r.out_tokens) - r.prefill_emitted for r in done)
 
 
 class ServingEngine:
@@ -146,6 +182,7 @@ class ServingEngine:
     jitted fns for their pjit'd versions (same signatures — launch/serve.py)."""
 
     _speculative = False   # only serving.speculative.SpeculativeEngine drafts
+    _chunked = False       # only PagedServingEngine prefills chunk-by-chunk
 
     def __init__(self, arch_cfg, params, ecfg: EngineConfig = EngineConfig()):
         self._init_common(arch_cfg, params, ecfg)
@@ -177,6 +214,12 @@ class ServingEngine:
                 f"{type(self).__name__} does not speculate "
                 f"(spec_k={ecfg.spec_k} requested); use SpeculativeEngine"
             )
+        if ecfg.prefill_chunk is not None and not self._chunked:
+            raise EngineCapabilityError(
+                f"{type(self).__name__} prefills in one shot "
+                f"(prefill_chunk={ecfg.prefill_chunk} requested); chunked "
+                "prefill needs the paged engine"
+            )
         if ecfg.kv_dtype not in _KV_DTYPES and ecfg.kv_dtype != "int8":
             raise ValueError(f"unknown kv_dtype {ecfg.kv_dtype!r}")
         if ecfg.evict_policy not in _EVICT_POLICIES:
@@ -190,6 +233,10 @@ class ServingEngine:
         self.params = deployed if deployed is not None else params
         self._queue: list[Request] = []
         self._active: dict[int, Request] = {}   # slot -> request
+        # slot -> tokens prefilled so far; a slot present here is MID-PREFILL
+        # (chunked paged engine only — always empty on the other engines) and
+        # does not participate in decode ticks
+        self._progress: dict[int, int] = {}
         self._uid = 0
         self._steps = 0
         self._last_token = np.zeros(ecfg.max_slots, np.int64)
@@ -211,12 +258,27 @@ class ServingEngine:
         self._uid += 1
         self._queue.append(
             Request(self._uid, list(prompt), max_new_tokens,
-                    submitted_at=time.time(), deadline=deadline)
+                    submitted_at=_now(), deadline=deadline)
         )
         return self._uid
 
     def _validate(self, prompt: list[int], max_new_tokens: int):
         _validate_request(prompt, max_new_tokens, self.ecfg.max_len)
+
+    def _order_queue(self):
+        """Earliest-deadline-first admission order, shared by BOTH batched
+        engines (the slot-padded engine used to pop FIFO and ignore
+        deadlines). Tiebreaks are stable: among equal deadlines (or no
+        deadlines at all) evicted/resumed requests go first — they already
+        spent pool time, and finishing them releases memory soonest — then
+        FIFO by uid. EDF stays primary: an evicted request with a LATER
+        deadline does not jump an urgent fresh one (the old paged queue-head
+        insert did exactly that, and the pre-admit re-sort then dropped it)."""
+        self._queue.sort(
+            key=lambda r: (
+                r.deadline is None, r.deadline or 0.0, -r.evictions, r.uid
+            )
+        )
 
     @property
     def has_work(self) -> bool:
@@ -283,10 +345,12 @@ class ServingEngine:
         return min(b, self.ecfg.max_len)
 
     def _admit(self, free: list[int], done: list[Request], step: int):
-        """Batch all admissible queued requests through one prefill call."""
+        """Batch all admissible queued requests through one prefill call
+        (earliest deadline first — see ``_order_queue``)."""
         take = min(len(free), len(self._queue))
         if not take:
             return
+        self._order_queue()
         reqs = [self._queue.pop(0) for _ in range(take)]
         s = self.ecfg.max_slots
         bucket = self._bucket(max(len(r.prompt) for r in reqs))
@@ -294,7 +358,7 @@ class ServingEngine:
         lengths = np.ones((s,), np.int32)        # padded rows: 1 valid token
         slot_ids = np.full((s,), s, np.int32)    # out-of-range => dropped
         slots = []
-        now = time.time()
+        now = _now()
         for i, req in enumerate(reqs):
             slot = free.pop()
             slots.append(slot)
@@ -310,10 +374,11 @@ class ServingEngine:
         self.prefill_calls += 1
         firsts = np.asarray(first)               # one fetch per admit batch
         for i, (slot, req) in enumerate(zip(slots, reqs)):
+            req.prefill_emitted += 1
             self._record(slot, req, int(firsts[i]), free, done)
 
     def _record(self, slot: int, req: Request, tok: int, free, done):
-        now = time.time()
+        now = _now()
         req.out_tokens.append(tok)
         req.token_times.append(now)
         if req.first_token_at == 0.0:
@@ -335,13 +400,19 @@ class ServingEngine:
     def _pre_decode(self, free: list[int], done: list[Request]):
         """Hook: the paged engine grows page allocations / evicts here."""
 
+    def _prefill_progress(self, free: list[int], done: list[Request],
+                          step: int):
+        """Hook: the chunked paged engine advances mid-prefill slots by one
+        chunk here (at most one jitted chunk program per tick)."""
+
     def _device_cache(self):
         """Hook: the paged engine pushes host block-table updates here."""
         return self.cache
 
     def step(self) -> list[Request]:
-        """ONE engine tick: admit whatever fits, then one jitted decode step
-        over all active slots. Returns requests that finished this tick."""
+        """ONE engine tick: admit whatever fits, advance mid-prefill slots by
+        one chunk, then one jitted decode step over all decode-phase slots.
+        Returns requests that finished this tick."""
         done: list[Request] = []
         s = self.ecfg.max_slots
         self._steps += 1
@@ -349,13 +420,14 @@ class ServingEngine:
         self._admit(free, done, self._steps)
         if not self._active:
             return done
+        self._prefill_progress(free, done, self._steps)
         self._pre_decode(free, done)
-        if not self._active:
-            return done
         active = np.zeros((s,), bool)
         for slot in self._active:
-            active[slot] = True
-        self._decode_tick(active, free, done)
+            if slot not in self._progress:   # mid-prefill slots don't decode
+                active[slot] = True
+        if active.any():
+            self._decode_tick(active, free, done)
         return done
 
     def _decode_tick(self, active: np.ndarray, free: list[int],
@@ -365,7 +437,8 @@ class ServingEngine:
         s = self.ecfg.max_slots
         tokens = np.zeros((s, 1), np.int32)
         for slot in self._active:
-            tokens[slot, 0] = self._last_token[slot]
+            if slot not in self._progress:
+                tokens[slot, 0] = self._last_token[slot]
         nxt, self.cache = self._decode(
             self.params, jnp.asarray(tokens), self._device_cache(),
             jnp.asarray(active), jnp.asarray(self._steps, jnp.int32),
@@ -373,6 +446,8 @@ class ServingEngine:
         self.decode_calls += 1
         toks = np.asarray(nxt)               # ONE host sync per step
         for slot, req in list(self._active.items()):
+            if slot in self._progress:
+                continue
             self._record(slot, req, int(toks[slot]), free, done)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
@@ -423,11 +498,20 @@ class BlockAllocator:
         return pages
 
     def free(self, pages: list[int]):
-        for p in pages:
-            if p not in self._owned:
-                raise ValueError(f"freeing page {p} that is not allocated")
-            self._owned.remove(p)
-            self._free.append(p)
+        """Return pages to the pool — all of them or none of them.
+
+        The whole list is validated BEFORE any state changes: a bad entry
+        (unowned page, or a duplicate within the list) used to raise mid-loop
+        with the earlier pages already freed, leaving free + used != pool for
+        every caller that caught the error. Now a bad free raises without
+        mutating anything, so the allocator invariant survives."""
+        bad = sorted({p for p in pages if p not in self._owned})
+        if bad:
+            raise ValueError(f"freeing page(s) {bad} that are not allocated")
+        if len(set(pages)) != len(pages):
+            raise ValueError(f"duplicate page(s) in free list {sorted(pages)}")
+        self._owned.difference_update(pages)
+        self._free.extend(pages)
 
 
 class PagedServingEngine(ServingEngine):
@@ -439,7 +523,18 @@ class PagedServingEngine(ServingEngine):
     allocations grow one page at a time, and pool exhaustion evicts a victim
     back to the queue (it resumes later by re-prefilling prompt + generated
     tokens, which under greedy decoding reproduces the same continuation).
+
+    With ``prefill_chunk`` set, admission only reserves pages for the FIRST
+    chunk and marks the slot mid-prefill; each tick then advances every
+    mid-prefill slot by one chunk through a single jitted ``(S, chunk)``
+    program (``models.model.chunk_prefill_step``: scatter into pages at the
+    slot's current length, causal mask offset by it) while decode-phase slots
+    keep decoding. Pages are reserved chunk-by-chunk; a chunk that cannot get
+    pages stalls its slot at the last completed chunk (no progress lost)
+    rather than blocking the tick.
     """
+
+    _chunked = True
 
     def __init__(self, arch_cfg, params, ecfg: EngineConfig = EngineConfig()):
         self._init_common(arch_cfg, params, ecfg)
@@ -451,6 +546,14 @@ class PagedServingEngine(ServingEngine):
         self.num_blocks = ecfg.num_blocks or ecfg.max_slots * self._nb_slot
         self.allocator = BlockAllocator(self.num_blocks)
         self._quantized = ecfg.kv_dtype == "int8"
+        self._chunk = ecfg.prefill_chunk
+        if self._chunk is not None:
+            if self._chunk < 1 or self._chunk % bs:
+                raise ValueError(
+                    f"prefill_chunk={self._chunk} must be a positive multiple "
+                    f"of block_size={bs} (chunks scatter whole pages)"
+                )
+            self._chunk = min(self._chunk, self._max_len)
         self.cache = model_lib.init_paged_cache(
             arch_cfg, ecfg.max_slots, self.num_blocks, bs, self._nb_slot,
             dtype=jnp.float32 if self._quantized else _KV_DTYPES[ecfg.kv_dtype],
@@ -462,8 +565,12 @@ class PagedServingEngine(ServingEngine):
         )
         self._table_dirty = False
         self._pages: dict[int, list[int]] = {}       # slot -> page ids
+        self._ptarget: dict[int, int] = {}           # slot -> prefill target len
+        self.chunk_calls = 0
+        self.chunk_traces = 0
         self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(5,))
+        self._chunk_prog = jax.jit(self._chunk_fn, donate_argnums=(5,))
 
     # ------------------------------------------------------------ intake ---
 
@@ -493,37 +600,82 @@ class PagedServingEngine(ServingEngine):
         first_tok = self._sample(last[:, 0], step, salt=1, slots=slot_ids)
         return first_tok, cache._replace(length=new_len)
 
+    def _chunk_target(self, params, tokens, counts, slot_ids, starts, cache,
+                      step):
+        """Shared device body of a prefill chunk (the speculative engine's
+        two-model chunk program reuses it for the target side, so the two
+        engines cannot drift). Rows are slot-indexed (tokens[b] lands at
+        positions starts[b]..starts[b]+counts[b]-1 of slot b), queries attend
+        previously written pages plus the chunk itself. ``starts`` is the
+        host-tracked prefill progress — rows with counts > 0 RESET their
+        device length to it (a freshly admitted slot may inherit a stale
+        length from the slot's previous occupant; chunk 1 must insert at 0,
+        exactly as the one-shot prefill sets lengths outright). Rows with
+        counts == 0 (decode-phase or stalled slots) keep their length frozen
+        and write a junk row there — masked by the length and overwritten by
+        the next real insert, exactly like inactive decode rows. Returns
+        (sampled next token per row — meaningful only where a prompt ended —
+        updated cache, pre-chunk lengths)."""
+        n0 = jnp.where(counts > 0, starts, cache.length)
+        cache = cache._replace(length=n0)
+        logits, cache = model_lib.chunk_prefill_step(
+            params, tokens, counts, cache, self.cfg
+        )
+        last = jnp.take_along_axis(
+            logits, jnp.maximum(counts - 1, 0)[:, None, None], axis=1
+        )
+        tok = self._sample(last[:, 0], step, salt=1, slots=slot_ids)
+        return tok, cache, n0
+
+    def _chunk_fn(self, params, tokens, counts, slot_ids, starts, cache, step):
+        self.chunk_traces += 1
+        tok, cache, _ = self._chunk_target(
+            params, tokens, counts, slot_ids, starts, cache, step
+        )
+        return tok, cache
+
     # ------------------------------------------------------------- steps ---
 
     def _admit(self, free: list[int], done: list[Request], step: int):
         """Admit every queued request that a free slot + free pages can cover
-        (earliest deadline first when deadlines are present, else FIFO)."""
+        (earliest deadline first — ``_order_queue``). One-shot mode prefills
+        the whole prompt here; chunked mode only reserves the first chunk's
+        pages and hands the slot to ``_prefill_progress``."""
         if not self._queue or not free:
             return
-        if any(r.deadline is not None for r in self._queue):
-            self._queue.sort(
-                key=lambda r: (r.deadline is None, r.deadline or 0.0, r.uid)
-            )
+        self._order_queue()
         reserve = self.ecfg.decode_reserve or self._bs
         admitted: list[tuple[int, Request, list[int], int]] = []
         while self._queue and free:
             req = self._queue[0]
             ptoks = req.prompt + req.out_tokens      # evicted requests resume
-            remaining = max(req.max_new_tokens - len(req.out_tokens), 1)
-            want = len(ptoks) + min(max(reserve, 1), remaining)
+            if self._chunk is not None and len(ptoks) > self._chunk:
+                want = self._chunk                   # first chunk only; the
+                #                                      rest reserves chunk-by-
+                #                                      chunk as prefill advances
+            else:
+                remaining = max(req.max_new_tokens - len(req.out_tokens), 1)
+                want = len(ptoks) + min(max(reserve, 1), remaining)
             blocks = min(-(-want // self._bs), self._nb_slot)
             pages = self.allocator.alloc(blocks)
             if pages is None:
                 break                                # pool full: stay queued
             self._queue.pop(0)
             slot = free.pop()
-            req.admitted_at = time.time()
+            req.admitted_at = _now()
             self._active[slot] = req
             self._pages[slot] = pages
             self._table[slot, : len(pages)] = pages
             self._table_dirty = True
             admitted.append((slot, req, pages, len(ptoks)))
         if not admitted:
+            return
+        if self._chunk is not None:
+            # chunked mode: no prefill program at admission — mark the slots
+            # mid-prefill; this same tick's _prefill_progress runs chunk 1
+            for slot, req, _, plen in admitted:
+                self._progress[slot] = 0
+                self._ptarget[slot] = plen
             return
 
         s = self.ecfg.max_slots
@@ -542,6 +694,7 @@ class PagedServingEngine(ServingEngine):
             page_map[i, :prompt_blocks] = pages[:prompt_blocks]
         firsts = self._prefill_admitted(tokens, lengths, slot_ids, page_map, step)
         for i, (slot, req, _, _) in enumerate(admitted):
+            req.prefill_emitted += 1
             self._record(slot, req, int(firsts[i]), free, done)
 
     def _prefill_admitted(self, tokens, lengths, slot_ids, page_map, step):
@@ -555,6 +708,105 @@ class PagedServingEngine(ServingEngine):
         self.prefill_calls += 1
         return np.asarray(first)
 
+    def _prefill_progress(self, free: list[int], done: list[Request],
+                          step: int):
+        """Advance every mid-prefill slot by ONE chunk (a single jitted call
+        covers all of them). Per slot: reserve pages for the chunk (plus the
+        decode headroom when it is the final chunk). Prefill growth never
+        evicts — a slot whose chunk cannot get pages STALLS at its last
+        completed chunk and resumes once decode-phase slots finish and free
+        pages (eviction here would let two contending prefills ping-pong each
+        other forever: each re-admits with one chunk's pages and evicts the
+        other's progress — measured livelock, see tests). The one deadlock
+        case — EVERY active slot is a stalled prefill, so nothing will ever
+        free a page — evicts the least-progressed stalled slot and lets the
+        SURVIVORS absorb the freed pages within this same tick (deferring to
+        the next tick would hand them straight back to the evicted request at
+        re-admission — its first chunk can need exactly what eviction freed,
+        a measured ping-pong that starves everyone forever); survivor page
+        counts therefore grow monotonically and some prefill always
+        completes. Slots whose prompt completes emit their first token here
+        (the chunked counterpart of the one-shot admission prefill)."""
+        if not self._progress:
+            return
+        reserve = self.ecfg.decode_reserve or self._bs
+        while True:
+            ready: list[int] = []
+            stalled: list[int] = []
+            for slot in sorted(self._progress):
+                req = self._active.get(slot)
+                if req is None:
+                    continue
+                p = self._progress[slot]
+                target = self._ptarget[slot]
+                c = min(self._chunk, target - p)
+                if p + c >= target:      # final chunk: also reserve headroom
+                    remaining = max(req.max_new_tokens - len(req.out_tokens), 1)
+                    want = target + min(max(reserve, 1), remaining)
+                else:
+                    want = p + c
+                need = min(-(-want // self._bs), self._nb_slot)
+                while len(self._pages[slot]) < need:
+                    page = self.allocator.alloc(1)
+                    if page is None:
+                        break
+                    idx = len(self._pages[slot])
+                    self._pages[slot].append(page[0])
+                    self._table[slot, idx] = page[0]
+                    self._table_dirty = True
+                (ready if len(self._pages[slot]) >= need
+                 else stalled).append(slot)
+            if ready or not stalled:
+                break
+            if not all(s in self._progress for s in self._active):
+                return   # a decoder is still running: it is bounded by
+                #          max_new_tokens and will free its pages — stall
+            # total stall, nothing will free a page on its own: evict the
+            # least-progressed slot and retry so the survivors take the
+            # freed pages NOW (each pass removes one slot, so this loop is
+            # bounded by max_slots; a lone survivor always fits by the
+            # submit-time validation)
+            self._evict(min(stalled, key=lambda s: (self._progress[s], s)),
+                        free)
+        if not ready:
+            return
+        s = self.ecfg.max_slots
+        tokens = np.zeros((s, self._chunk), np.int32)
+        counts = np.zeros((s,), np.int32)
+        slot_ids = np.full((s,), s, np.int32)
+        starts = np.zeros((s,), np.int32)
+        for slot in ready:
+            req = self._active[slot]
+            p = self._progress[slot]
+            c = min(self._chunk, self._ptarget[slot] - p)
+            ptoks = req.prompt + req.out_tokens
+            tokens[slot, :c] = ptoks[p : p + c]
+            counts[slot] = c
+            slot_ids[slot] = slot
+            starts[slot] = p
+        firsts = self._chunk_call(tokens, counts, slot_ids, starts, step)
+        for slot in ready:
+            req = self._active.get(slot)
+            if req is None:
+                continue
+            self._progress[slot] += int(counts[slot])
+            if self._progress[slot] >= self._ptarget[slot]:
+                del self._progress[slot]
+                del self._ptarget[slot]
+                req.prefill_emitted += 1
+                self._record(slot, req, int(firsts[slot]), free, done)
+
+    def _chunk_call(self, tokens, counts, slot_ids, starts, step):
+        """Device portion of a chunk tick (hook: the speculative engine also
+        runs the draft's chunk here). Returns sampled tokens (host)."""
+        first, self.cache = self._chunk_prog(
+            self.params, jnp.asarray(tokens), jnp.asarray(counts),
+            jnp.asarray(slot_ids), jnp.asarray(starts), self._device_cache(),
+            jnp.asarray(step, jnp.int32),
+        )
+        self.chunk_calls += 1
+        return np.asarray(first)
+
     def _pre_decode(self, free: list[int], done: list[Request]):
         """Grow each active slot's pages to cover this tick's KV writes; evict
         when the pool is dry. The next decode writes the KV of the latest
@@ -565,8 +817,9 @@ class PagedServingEngine(ServingEngine):
         window = getattr(self, "_write_window", 1)
         for slot in list(self._active):
             req = self._active.get(slot)
-            if req is None:
-                continue
+            if req is None or slot in self._progress:
+                continue                 # mid-prefill slots grow in their own
+                #                          chunk scheduler, not here
             write_pos = len(req.prompt) + len(req.out_tokens) - 1 + (window - 1)
             need = min(write_pos // self._bs + 1, self._nb_slot)
             while slot in self._active and len(self._pages[slot]) < need:
@@ -578,9 +831,18 @@ class PagedServingEngine(ServingEngine):
                     self._table_dirty = True
                     continue
                 victim = self._choose_victim()
+                if victim is None:
+                    break
                 self._evict(victim, free)
 
-    def _choose_victim(self) -> int:
+    def _choose_victim(self) -> int | None:
+        """Pick an eviction victim for DECODE-phase page growth (prefill
+        growth stalls instead of evicting — see ``_prefill_progress``). Under
+        ``longest_remaining`` a mid-prefill slot counts its full
+        ``max_new_tokens`` as remaining, so it is naturally preferred over a
+        nearly-finished decoder — its pages stay pinned longest otherwise."""
+        if not self._active:
+            return None
         if self.ecfg.evict_policy == "lru":
             # least-recently admitted slot
             return min(self._active, key=lambda s: (self._active[s].admitted_at, s))
@@ -593,13 +855,14 @@ class PagedServingEngine(ServingEngine):
         )
 
     def _evict(self, slot: int, free: list[int]):
-        """Return the slot's pages and push its request to the queue head; it
-        re-prefills prompt + generated tokens on re-admission."""
+        """Return the slot's pages and re-queue its request; it re-prefills
+        prompt + generated tokens on re-admission (resumed requests sort
+        ahead of fresh ones with the same deadline — see ``_order_queue``)."""
         req = self._active.pop(slot)
         req.evictions += 1
         self.evictions += 1
         self._release(slot)
-        self._queue.insert(0, req)
+        self._queue.append(req)
         free.append(slot)
 
     def _release(self, slot: int):
@@ -608,6 +871,8 @@ class PagedServingEngine(ServingEngine):
             self.allocator.free(pages)
         self._table[slot, :] = self.num_blocks
         self._table_dirty = True
+        self._progress.pop(slot, None)
+        self._ptarget.pop(slot, None)
 
     def _device_cache(self):
         if self._table_dirty:
@@ -633,6 +898,10 @@ class ReferenceEngine:
             missing.append(f"kv_dtype={ecfg.kv_dtype!r}")
         if ecfg.spec_k:
             missing.append(f"speculative decoding (spec_k={ecfg.spec_k})")
+        if ecfg.prefill_chunk is not None:
+            missing.append(
+                f"chunked prefill (prefill_chunk={ecfg.prefill_chunk})"
+            )
         if missing:
             raise EngineCapabilityError(
                 f"family {arch_cfg.family!r} serves through ReferenceEngine "
@@ -668,7 +937,7 @@ class ReferenceEngine:
         self._uid += 1
         self._queue.append(
             Request(self._uid, list(prompt), max_new_tokens,
-                    submitted_at=time.time(), deadline=deadline)
+                    submitted_at=_now(), deadline=deadline)
         )
         return self._uid
 
@@ -703,7 +972,7 @@ class ReferenceEngine:
                 last = (req.out_tokens or req.prompt)[-1]
                 nxt = self._step_slot(slot, last)
                 req.out_tokens.append(int(nxt))
-                now = time.time()
+                now = _now()
                 req.token_times.append(now)
                 if req.first_token_at == 0.0:
                     req.first_token_at = now

@@ -277,6 +277,7 @@ class SpeculativeEngine(PagedServingEngine):
             self._spec_parallel_fn, donate_argnums=(3, 4),
         )
         self._prefill2 = jax.jit(self._prefill2_fn, donate_argnums=(6, 7))
+        self._chunk2 = jax.jit(self._chunk2_fn, donate_argnums=(6, 7))
 
     # ------------------------------------------------------------- metrics ---
 
@@ -317,6 +318,26 @@ class SpeculativeEngine(PagedServingEngine):
         )
         dcache = transformer_lib.scatter_prefill_pages(dcache, dkvs, page_map)
         return first_tok, cache, (dcache.k, dcache.v, dcache.k_scale, dcache.v_scale)
+
+    def _chunk2_fn(self, tparams, dparams, tokens, counts, slot_ids, starts,
+                   cache, dpools, step):
+        """Chunked-prefill tick for BOTH caches in one program: the target
+        side is the base engine's ``_chunk_target`` verbatim (sampling the
+        next token where a prompt ends, exactly like the one-shot
+        ``_prefill2_fn``), then the draft runs the same chunk at the SAME
+        pre-chunk lengths through the shared block table, so the two caches
+        stay position-aligned chunk by chunk."""
+        self.chunk_traces += 1
+        tok, cache, n0 = self._chunk_target(
+            tparams, tokens, counts, slot_ids, starts, cache, step
+        )
+        dcache = transformer_lib.PagedKVCache(
+            dpools[0], dpools[1], cache.block_table, n0, dpools[2], dpools[3]
+        )
+        _, dcache = model_lib.chunk_prefill_step(
+            dparams, tokens, counts, dcache, self.cfg
+        )
+        return tok, cache, (dcache.k, dcache.v, dcache.k_scale, dcache.v_scale)
 
     def _spec_parallel_fn(self, tparams, dparams, window, cache, dpools,
                           active, step):
@@ -427,6 +448,15 @@ class SpeculativeEngine(PagedServingEngine):
         self.prefill_calls += 1
         return np.asarray(first)
 
+    def _chunk_call(self, tokens, counts, slot_ids, starts, step):
+        first, self.cache, self._dpools = self._chunk2(
+            self.params, self.draft_params, jnp.asarray(tokens),
+            jnp.asarray(counts), jnp.asarray(slot_ids), jnp.asarray(starts),
+            self._device_cache(), self._dpools, jnp.asarray(step, jnp.int32),
+        )
+        self.chunk_calls += 1
+        return np.asarray(first)
+
     def _release(self, slot: int):
         super()._release(slot)
         self._guess[slot, :] = 0        # fresh/resumed slots restart guessing
@@ -441,6 +471,8 @@ class SpeculativeEngine(PagedServingEngine):
         k = self._k
         tokens = np.zeros((s, k if self._parallel else 1), np.int32)
         for slot in self._active:
+            if slot in self._progress:   # mid-prefill slots don't decode
+                continue
             tokens[slot, 0] = self._last_token[slot]
             if self._parallel:
                 tokens[slot, 1:] = self._guess[slot, : k - 1]
@@ -470,6 +502,8 @@ class SpeculativeEngine(PagedServingEngine):
         ema_sum = 0.0
         n_active = 0
         for slot, req in list(self._active.items()):
+            if slot in self._progress:   # drafted nothing this tick
+                continue
             n_active += 1
             m = int(emitted_np[slot])
             rate = float(accepted_np[slot]) / drafted

@@ -60,6 +60,24 @@ class TestBlockAllocator:
         with pytest.raises(ValueError):
             a.free(pages)
 
+    def test_bad_free_is_atomic(self):
+        """A free list containing an unowned page must raise WITHOUT freeing
+        anything: the old page-by-page loop raised mid-way, leaving
+        free + used != pool for callers that caught the error."""
+        a = BlockAllocator(8)
+        pages = a.alloc(4)
+        with pytest.raises(ValueError):
+            a.free([pages[0], pages[1], 99])      # 99 was never allocated
+        # nothing was freed: the invariant AND the exact ownership survive
+        assert a.free_blocks + a.used_blocks == 8
+        assert a.used_blocks == 4
+        with pytest.raises(ValueError):
+            a.free([pages[0], pages[0]])          # duplicate within one call
+        assert a.used_blocks == 4
+        a.free(pages)                             # the good free still works
+        assert a.free_blocks == 8 and a.used_blocks == 0
+        assert a.alloc(8) is not None
+
     def test_interchangeable_pages_no_fragmentation(self):
         """Freeing ANY n pages lets ANY n-page request through: pool capacity
         is the only constraint (no contiguity, no external fragmentation)."""
