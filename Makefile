@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-latency bench-prefill bench-spec serve-demo
+.PHONY: test bench-smoke bench bench-latency bench-prefill bench-spec bench-elastic serve-demo
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -24,11 +24,17 @@ bench-prefill:
 bench-spec:
 	$(PYTHON) -m benchmarks.serve_spec --quick
 
+# elastic tiers: per-tier tok/s, tier-switch latency (no re-jit on switch),
+# admitted rate under page pressure with the tier controller on vs off
+bench-elastic:
+	$(PYTHON) -m benchmarks.serve_elastic --quick
+
 # full scaled-down paper benchmark suite
 bench:
 	$(PYTHON) -m benchmarks.run --quick
 
-# elastic-deployment spectrum through the batched SLR engine
+# elastic-deployment spectrum: ONE engine serving all three budget tiers
 serve-demo:
 	$(PYTHON) -m repro.launch.serve --arch salaad_llama_60m --reduced \
-	    --keep-ratios 1.0,0.6,0.3 --fmt factored --requests 8
+	    --keep-ratios 1.0,0.6,0.3 --fmt factored --requests 8 \
+	    --tier-policy pressure

@@ -115,6 +115,13 @@ def engine_provenance(engine) -> dict:
         "prefill_chunk": getattr(e, "prefill_chunk", None),
         "greedy": e.greedy,
     }
+    bank = getattr(engine, "bank", None)
+    if bank is not None and len(bank) > 1:
+        out["tiers"] = {
+            "num_tiers": len(bank),
+            "policy": getattr(e, "tier_policy", "static"),
+            "names": [t.name for t in bank],
+        }
     if getattr(e, "spec_k", 0):
         out["spec"] = {
             "k": e.spec_k,

@@ -1,0 +1,204 @@
+"""Elastic-serving benchmark: budget tiers as a serving dimension.
+
+Trains the reduced 60m config with the real SALAAD trainer, materializes the
+HPA spectrum as ONE ModelBank (factored views sharing the base pytree), and
+measures the three things the elastic API promises:
+
+1. **Per-tier decode throughput** — the same engine drives pinned batches at
+   each tier: cheaper tiers step faster because HPA removed structure, and
+   the engine switches between them without rebuilding anything.
+2. **Tier-switch latency** — with every tier's program warmed, a mid-stream
+   downshift must cost an ordinary tick: the benchmark measures the first
+   tick after a forced shift vs the steady-state tick and records
+   ``retraces_on_switch`` (MUST be 0 — each tier compiles exactly once).
+3. **Admitted rate under page pressure** — a deliberately tight page pool
+   driven closed-loop with the pressure controller ON vs OFF: the controller
+   downshifts the serving tier (cheaper, faster steps → sooner completions →
+   sooner frees) before the engine resorts to eviction.
+
+Results → ``BENCH_elastic.json`` (per-row engine-config provenance included).
+
+  PYTHONPATH=src python -m benchmarks.serve_elastic --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.serving.elastic import ModelBank
+from repro.serving.engine import EngineConfig, PagedServingEngine
+
+from .common import bench_arch, emit, engine_provenance, salaad_cfg, train_salaad
+
+
+def drive(engine, requests: int, max_new: int, tier: int | None = None) -> dict:
+    """Closed-loop: submit a fixed trace (optionally pinned to one tier),
+    run to completion."""
+    for i in range(requests):
+        engine.submit([1 + (i % 7), 2, 3, 4], max_new_tokens=max_new,
+                      tier=tier)
+    # snapshot EVERY cumulative counter so warmup drives on the same engine
+    # never pollute a measured row
+    calls0 = engine.decode_calls
+    evict0 = engine.evictions
+    down0 = engine.downshift_ticks
+    switch0 = engine.tier_switches
+    t0 = time.perf_counter()
+    done = engine.run()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out_tokens) for r in done)
+    assert len(done) == requests, (len(done), requests)
+    return {
+        "requests": len(done),
+        "tokens": tokens,
+        "wall_s": round(dt, 4),
+        "tok_per_s": round(tokens / max(dt, 1e-9), 1),
+        "admitted_req_per_s": round(len(done) / max(dt, 1e-9), 2),
+        "decode_calls": engine.decode_calls - calls0,
+        "evictions": engine.evictions - evict0,
+        "downshift_ticks": engine.downshift_ticks - down0,
+        "tier_switches": engine.tier_switches - switch0,
+    }
+
+
+def per_tier_throughput(bank, ecfg_kw, requests, max_new) -> dict:
+    """One engine, every tier exercised in turn (warmup absorbs each tier's
+    single compilation; the engine is NOT rebuilt between budgets — that is
+    the API change being measured)."""
+    eng = PagedServingEngine(bank, EngineConfig(**ecfg_kw))
+    rows = {}
+    for t in range(len(bank)):
+        drive(eng, max(requests // 2, 2), max_new, tier=t)   # warm tier t
+        row = drive(eng, requests, max_new, tier=t)
+        rows[bank[t].name] = {
+            "tier": t,
+            "served_bytes": bank[t].param_bytes,
+            "tok_per_s": row["tok_per_s"],
+        }
+    rows["_engine"] = {
+        "decode_traces": eng.decode_traces,    # <= one per tier, ever
+        "engine_config": engine_provenance(eng),
+    }
+    return rows
+
+
+def tier_switch_latency(bank, ecfg_kw, ticks: int = 6) -> dict:
+    """Steady-tick vs first-tick-after-downshift wall time, with every
+    tier's program already warmed — the no-re-jit claim, measured."""
+    eng = PagedServingEngine(bank, EngineConfig(**ecfg_kw))
+    for t in range(len(bank)):                 # warm every tier's programs
+        drive(eng, 2, 4, tier=t)
+    traces0 = eng.decode_traces
+
+    eng.submit([5, 7, 11, 13], max_new_tokens=4 + 2 * ticks, tier=0)
+    steady = []
+    for _ in range(ticks):
+        t0 = time.perf_counter()
+        eng.step()
+        steady.append(time.perf_counter() - t0)
+    eng._tier_shift = len(bank) - 1            # force the controller's move
+    t0 = time.perf_counter()
+    eng.step()                                 # the switch tick
+    switch_s = time.perf_counter() - t0
+    eng.run()
+    return {
+        "steady_tick_ms": round(1e3 * sum(steady) / len(steady), 2),
+        "switch_tick_ms": round(1e3 * switch_s, 2),
+        "switch_over_steady": round(
+            switch_s / max(sum(steady) / len(steady), 1e-9), 2
+        ),
+        "retraces_on_switch": eng.decode_traces - traces0,
+        "tier_switches": eng.tier_switches,
+    }
+
+
+def pressure_comparison(bank, ecfg_kw, requests, max_new) -> dict:
+    """Tight pool, controller on vs off, same closed-loop trace."""
+    rows = {}
+    for name, policy in (("controller_off", "static"),
+                         ("controller_on", "pressure")):
+        eng = PagedServingEngine(bank, EngineConfig(
+            **ecfg_kw, tier_policy=policy,
+            tier_target_free=0.35, tier_gain=6.0,
+        ))
+        drive(eng, 2, 4)                       # warm tier 0 + admission
+        if policy == "pressure":               # warm the downshift tiers too
+            for t in range(1, len(bank)):
+                drive(eng, 1, 2, tier=t)
+        row = drive(eng, requests, max_new)
+        row["engine_config"] = engine_provenance(eng)
+        rows[name] = row
+    off, on = rows["controller_off"], rows["controller_on"]
+    rows["summary"] = {
+        "admitted_rate_ratio": round(
+            on["admitted_req_per_s"] / max(off["admitted_req_per_s"], 1e-9), 2
+        ),
+        "evictions_off": off["evictions"],
+        "evictions_on": on["evictions"],
+        "downshift_ticks_on": on["downshift_ticks"],
+    }
+    return rows
+
+
+def run(
+    steps: int = 120,
+    budgets=(1.0, 0.6, 0.3),
+    kappa: float = 0.7,
+    requests: int = 8,
+    max_new: int = 16,
+    max_slots: int = 4,
+    max_len: int = 64,
+    block_size: int = 8,
+    pressure_blocks: int = 10,
+    fmt: str = "factored",
+    seed: int = 0,
+) -> dict:
+    cfg = bench_arch()
+    tr, state = train_salaad(cfg, steps=steps, scfg=salaad_cfg(), seed=seed)
+    bank = ModelBank.build(cfg, state.params, state.slr, tr.blocks,
+                           budgets=budgets, kappa=kappa, fmt=fmt)
+    base_kw = dict(max_slots=max_slots, max_len=max_len,
+                   block_size=block_size)
+    tight_kw = dict(max_slots=max_slots, max_len=max_len,
+                    block_size=block_size, num_blocks=pressure_blocks)
+    return {
+        "bank": bank.report(),
+        "per_tier": per_tier_throughput(bank, base_kw, requests, max_new),
+        "tier_switch": tier_switch_latency(bank, base_kw),
+        "pressure": pressure_comparison(bank, tight_kw, requests, max_new),
+        "train_steps": steps,
+    }
+
+
+def main(out: str = "BENCH_elastic.json", **kw):
+    rows = run(**kw)
+    Path(out).write_text(json.dumps(rows, indent=2))
+    sw = rows["tier_switch"]
+    pr = rows["pressure"]["summary"]
+    tiers = {k: v["tok_per_s"] for k, v in rows["per_tier"].items()
+             if not k.startswith("_")}
+    assert sw["retraces_on_switch"] == 0, sw   # the no-re-jit contract
+    emit(
+        "serve_elastic", 0.0,
+        f"per-tier tok/s {tiers}; switch {sw['switch_tick_ms']}ms vs steady "
+        f"{sw['steady_tick_ms']}ms (retraces={sw['retraces_on_switch']}); "
+        f"pressure admitted x{pr['admitted_rate_ratio']} "
+        f"(evictions {pr['evictions_off']}→{pr['evictions_on']}, "
+        f"downshift_ticks={pr['downshift_ticks_on']})",
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--fmt", default="factored",
+                    choices=("dense", "factored", "bsr"))
+    ap.add_argument("--out", default="BENCH_elastic.json")
+    a = ap.parse_args()
+    steps = a.steps or (60 if a.quick else 120)
+    main(out=a.out, steps=steps, fmt=a.fmt,
+         requests=4 if a.quick else 8, max_new=8 if a.quick else 16)

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.configs.base import get_arch
 from repro.models import model as model_lib
+from repro.serving.elastic import ModelBank
 from repro.serving.engine import (
     EngineConfig,
     PagedServingEngine,
@@ -148,16 +149,16 @@ def run(
     into a page pool shared by more decode slots."""
     cfg = get_arch("salaad_llama_60m").reduced()
     params = model_lib.init_params(cfg, jax.random.PRNGKey(seed))
+    bank = ModelBank.single(cfg, params)
     trace = build_trace(requests, rate_hz, cfg.vocab_size, max_new, seed)
     num_blocks = padded_slots * max_len // block_size
 
     engines = {
         "padded_slots": ServingEngine(
-            cfg, params,
-            EngineConfig(max_slots=padded_slots, max_len=max_len),
+            bank, EngineConfig(max_slots=padded_slots, max_len=max_len),
         ),
         "paged": PagedServingEngine(
-            cfg, params,
+            bank,
             EngineConfig(
                 max_slots=paged_slots, max_len=max_len,
                 block_size=block_size, num_blocks=num_blocks,
@@ -255,13 +256,14 @@ def run_mixed(
     interleaved with the other slots' decode steps."""
     cfg = get_arch("salaad_llama_60m").reduced()
     params = model_lib.init_params(cfg, jax.random.PRNGKey(seed))
+    bank = ModelBank.single(cfg, params)
     trace = build_mixed_trace(
         requests, rate_hz, cfg.vocab_size, max_new, long_len, seed
     )
     rows = {}
     for name, chunk in (("oneshot", None), ("chunked", prefill_chunk)):
         eng = PagedServingEngine(
-            cfg, params,
+            bank,
             EngineConfig(
                 max_slots=slots, max_len=max_len, block_size=block_size,
                 num_blocks=num_blocks, prefill_chunk=chunk,

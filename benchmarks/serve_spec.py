@@ -26,6 +26,7 @@ from pathlib import Path
 
 from repro.core.hpa import hpa_keep_ratio
 from repro.serving.deployed import DeployedModel
+from repro.serving.elastic import ModelBank
 from repro.serving.engine import (
     EngineConfig,
     PagedServingEngine,
@@ -95,11 +96,14 @@ def run(
     spec_blocks = base_blocks * per_page_base // per_page_spec
     budget = base_blocks * per_page_base
 
-    base = PagedServingEngine(cfg, target, EngineConfig(
+    # ONE bank carries both ends of the elastic spectrum: tier 0 (full
+    # budget) verifies, tier 1 (spec_budget) drafts
+    bank = ModelBank(cfg, [target, draft], keeps=[1.0, spec_budget])
+    base = PagedServingEngine(bank, EngineConfig(
         max_slots=max_slots, max_len=max_len, block_size=block_size,
         num_blocks=base_blocks,
     ))
-    spec = SpeculativeEngine(cfg, target, draft, EngineConfig(
+    spec = SpeculativeEngine(bank, EngineConfig(
         max_slots=max_slots, max_len=max_len, block_size=block_size,
         num_blocks=spec_blocks, spec_k=spec_k,
         spec_draft_kv_dtype=draft_dtype,

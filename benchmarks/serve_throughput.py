@@ -21,6 +21,7 @@ import jax
 
 from repro.core.hpa import hpa_keep_ratio
 from repro.serving.deployed import DeployedModel
+from repro.serving.elastic import ModelBank
 from repro.serving.engine import EngineConfig, ReferenceEngine, ServingEngine
 
 from .common import bench_arch, emit, salaad_cfg, train_salaad
@@ -59,11 +60,13 @@ def run(
         dense = DeployedModel.build(cfg, state.params, slr_c, tr.blocks, fmt="dense")
 
         engines = {
-            "reference_per_slot": ReferenceEngine(cfg, dense, ecfg),
-            "batched_dense": ServingEngine(cfg, dense, ecfg),
+            "reference_per_slot": ReferenceEngine(ModelBank.single(cfg, dense), ecfg),
+            "batched_dense": ServingEngine(ModelBank.single(cfg, dense), ecfg),
         }
         if fmt != "dense":  # avoid key collision with the dense baseline
-            engines[f"batched_{fmt}"] = ServingEngine(cfg, deployed, ecfg)
+            engines[f"batched_{fmt}"] = ServingEngine(
+                ModelBank.single(cfg, deployed), ecfg
+            )
         row = {"keep": keep, "slr_params": rep["params_after"],
                "served_bytes": deployed.param_bytes()["total_bytes"]}
         for name, eng in engines.items():

@@ -1,5 +1,8 @@
 """Elastic deployment (Fig. 3 in miniature): one SALAAD checkpoint, a sweep
-of parameter budgets, no retraining — the paper's headline capability.
+of parameter budgets, no retraining — and since the elastic API landed, the
+sweep is SERVED, not just evaluated: one ModelBank materializes the budget
+spectrum as tiers and a single paged engine decodes all of them concurrently
+(per-tier jitted steps over one shared paged KV).
 
     PYTHONPATH=src python examples/elastic_deploy.py
 """
@@ -12,8 +15,12 @@ from repro.core.selection import SelectionConfig
 from repro.data.synthetic import DataConfig, SyntheticC4
 from repro.models import model as model_lib
 from repro.optim.adam import AdamConfig
+from repro.serving.elastic import ModelBank
+from repro.serving.engine import EngineConfig, PagedServingEngine
 from repro.serving.slr_params import deployment_report
 from repro.train.trainer import Trainer, TrainerConfig
+
+BUDGETS = (1.0, 0.7, 0.4)
 
 
 def main():
@@ -43,6 +50,27 @@ def main():
         f"\ndeployment bytes: dense={rep['dense_total_bytes']/1e6:.2f}MB "
         f"slr={rep['slr_total_bytes']/1e6:.2f}MB "
         f"(compression x{rep['compression']:.2f})"
+    )
+
+    # --- serve the spectrum: one bank, one engine, three tiers ------------
+    bank = ModelBank.build(cfg, state.params, state.slr, trainer.blocks,
+                           budgets=BUDGETS, kappa=0.7, fmt="factored")
+    for t in bank:
+        print(f"tier {t.index} ({t.name}): served_bytes={t.param_bytes}")
+    print(f"shared base across tiers: {bank.shared_base_bytes()} bytes")
+
+    engine = PagedServingEngine(bank, EngineConfig(
+        max_slots=len(bank), max_len=48, block_size=8,
+    ))
+    for i in range(len(bank)):
+        engine.submit([1 + i, 2, 3], max_new_tokens=6, tier=i)
+    done = engine.run()
+    for r in sorted(done, key=lambda r: r.tier):
+        print(f"tier {r.tier} decoded concurrently: {r.out_tokens}")
+    print(
+        f"one engine, {len(bank)} budgets in flight: "
+        f"{engine.decode_traces} compiled decode programs, "
+        f"{engine.decode_calls} device calls"
     )
 
 

@@ -43,8 +43,11 @@ def main():
         f"served_bytes={deployed.param_bytes()['total_bytes']}"
     )
 
-    # batched serving straight off the SLR weights
-    engine = ServingEngine(cfg, deployed, EngineConfig(max_slots=2, max_len=48))
+    # batched serving straight off the SLR weights (single-tier bank)
+    from repro.serving.elastic import ModelBank
+
+    engine = ServingEngine(ModelBank.single(cfg, deployed),
+                           EngineConfig(max_slots=2, max_len=48))
     for i in range(4):
         engine.submit([1 + i, 2, 3], max_new_tokens=6)
     t0 = time.time()
@@ -60,10 +63,14 @@ def main():
     slr_d, _ = hpa_keep_ratio(state.slr, trainer.blocks, keep_ratio=0.4, kappa=0.7)
     draft = DeployedModel.build(cfg, state.params, slr_d, trainer.blocks, fmt="dense")
     target = DeployedModel.build(cfg, state.params, slr_c, trainer.blocks, fmt="dense")
-    spec = SpeculativeEngine(cfg, target, draft, EngineConfig(
-        max_slots=2, max_len=48, block_size=8, spec_k=4,
-        spec_draft_mode="sequential",   # short demo: no lookahead warmup
-    ))
+    # the draft/target pair is two tiers of one bank: tier 0 verifies,
+    # the cheapest tier (spec_draft_tier=-1, the default) drafts
+    spec = SpeculativeEngine(
+        ModelBank(cfg, [target, draft], keeps=[0.7, 0.4]),
+        EngineConfig(
+            max_slots=2, max_len=48, block_size=8, spec_k=4,
+            spec_draft_mode="sequential",   # short demo: no lookahead warmup
+        ))
     for i in range(4):
         spec.submit([1 + i, 2, 3], max_new_tokens=6)
     done = spec.run()

@@ -1,12 +1,19 @@
-"""Serving launcher: load a checkpoint (or fresh init), deploy the SLR model
-across one or more HPA budgets, and serve batched requests through the
-SLR-native engine — the elastic-deployment spectrum through the fast path.
-Default engine is the block-paged continuously-batched one; size its KV pool
-with --block-size/--num-blocks and (optionally) quantize it with --kv-dtype.
+"""Serving launcher: load a checkpoint (or fresh init), materialize the HPA
+budget spectrum as ONE ModelBank, and serve batched requests through a single
+engine — elastic deployment as a serving-time dimension, not a rebuild loop.
+
+``--keep-ratios`` names the bank's budget tiers (tier 0 = largest). Requests
+spread round-robin across the tiers (pin them all with ``--tier``); the paged
+engine runs one pre-compiled jitted step per active tier over the shared
+paged KV, and ``--tier-policy pressure`` turns on the controller that
+downshifts the serving tier under page pressure before resorting to
+eviction. All engines implement the ``serving.elastic.Engine`` protocol
+(submit / step / run / has_work / capabilities); the per-engine capability
+table is printed in ``--help``.
 
   python -m repro.launch.serve --arch salaad_llama_60m --reduced \
       --keep-ratios 1.0,0.6,0.3 --fmt factored --kappa 0.7 --requests 8 \
-      --block-size 16 --slo-ms 2000
+      --block-size 16 --slo-ms 2000 --tier-policy pressure
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ from repro.core.hpa import hpa_keep_ratio
 from repro.core.selection import SelectionConfig
 from repro.models import model as model_lib
 from repro.serving.deployed import DeployedModel
+from repro.serving.elastic import ModelBank, format_capability_table
 from repro.serving.engine import (
     BATCHED_FAMILIES,
     EngineConfig,
@@ -43,14 +51,18 @@ ENGINES = {
 
 
 def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
-                slo_ms: float | None = None) -> dict:
+                slo_ms: float | None = None, tiers=(None,)) -> dict:
+    """Drive one engine (Engine protocol) over a random trace, requests
+    spread round-robin over ``tiers``; per-tier token counts ride in the
+    stats so the elastic spectrum stays visible in one engine's output."""
     rng = np.random.RandomState(seed)
     submitted = time.time()          # deadlines are a wall-clock contract
-    for _ in range(requests):
+    for i in range(requests):
         prompt = rng.randint(0, vocab, size=rng.randint(2, 8)).tolist()
         engine.submit(
             prompt, max_new_tokens=max_new,
             deadline=None if slo_ms is None else submitted + slo_ms / 1e3,
+            tier=tiers[i % len(tiers)],
         )
     # engine timestamps (first_token_at etc.) are time.monotonic() values, so
     # latency math must use the same clock — an NTP step mid-run would
@@ -65,6 +77,11 @@ def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
         "tok_per_s": round(total_tokens / max(dt, 1e-9), 2),
         "sample": done[0].out_tokens if done else [],
     }
+    by_tier: dict[int, int] = {}
+    for r in done:
+        by_tier[r.tier] = by_tier.get(r.tier, 0) + len(r.out_tokens)
+    if len(by_tier) > 1 or (by_tier and next(iter(by_tier)) != 0):
+        stats["tokens_by_tier"] = {str(k): v for k, v in sorted(by_tier.items())}
     ttft = [r.first_token_at - t0 for r in done if r.first_token_at]
     if ttft:
         stats["ttft_p50_ms"] = round(float(np.percentile(ttft, 50)) * 1e3, 1)
@@ -76,6 +93,9 @@ def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
         )
     if hasattr(engine, "evictions"):
         stats["evictions"] = engine.evictions
+    if getattr(engine, "tier_controller", None) is not None:
+        stats["downshift_ticks"] = engine.downshift_ticks
+        stats["tier_switches"] = engine.tier_switches
     if hasattr(engine, "acceptance_rate"):
         stats["acceptance_rate"] = round(engine.acceptance_rate, 3)
         stats["tokens_per_step"] = round(
@@ -85,13 +105,18 @@ def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog="engine capabilities (serving.elastic.Engine protocol):\n\n"
+        + format_capability_table(ENGINES),
+    )
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument(
         "--keep-ratios", default=None,
-        help="comma-separated HPA budgets, e.g. 1.0,0.6,0.3 (omit: serve dense init)",
+        help="comma-separated HPA budgets materialized as ONE ModelBank's "
+             "tiers, largest first, e.g. 1.0,0.6,0.3 (omit: serve dense init)",
     )
     ap.add_argument("--fmt", default="factored", choices=("dense", "factored", "bsr"))
     ap.add_argument("--engine", default="paged", choices=tuple(ENGINES))
@@ -113,12 +138,19 @@ def main():
     ap.add_argument("--kv-dtype", default="float32",
                     choices=("float32", "bfloat16", "int8"),
                     help="KV storage dtype; int8 stores quantized pages (paged)")
+    ap.add_argument("--tier", type=int, default=None,
+                    help="pin every request to this bank tier (default: "
+                         "round-robin across all tiers)")
+    ap.add_argument("--tier-policy", default="static",
+                    choices=("static", "pressure"),
+                    help="pressure: downshift the serving tier under page "
+                         "pressure before evicting (paged engine)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative draft window (tokens/slot/tick); > 0 "
                          "serves through the SpeculativeEngine")
     ap.add_argument("--spec-budget", type=float, default=0.4,
-                    help="HPA keep-ratio of the self-speculation draft "
-                         "(the low-budget end of the elastic spectrum)")
+                    help="HPA keep-ratio of the self-speculation draft tier "
+                         "(appended to the bank as its cheapest tier)")
     ap.add_argument("--spec-adaptive", action="store_true",
                     help="adapt the draft window from observed acceptance")
     ap.add_argument("--seed", type=int, default=0)
@@ -149,62 +181,88 @@ def main():
     if spec_k > 0 and engine_cls is PagedServingEngine:
         engine_cls = SpeculativeEngine            # --spec-k implies speculation
     if engine_cls is not ReferenceEngine and cfg.family not in BATCHED_FAMILIES:
-        # explicit capability line; paged-only features requested on this
-        # family then fail loudly in the ReferenceEngine constructor
-        # (EngineCapabilityError) instead of silently degrading
-        print(json.dumps({"note": f"family {cfg.family!r} has no per-slot-length "
-                          "cache yet; falling back to the reference engine "
-                          "(per-slot loop; float32 contiguous cache; no "
-                          "kv_dtype / speculative decoding)"}))
+        # explicit capability line (the structured dict a constructor-time
+        # EngineCapabilityError would carry); paged-only features requested
+        # on this family then fail loudly in the ReferenceEngine constructor
+        # instead of silently degrading
+        print(json.dumps({
+            "note": f"family {cfg.family!r} has no per-slot-length cache "
+                    "yet; falling back to the reference engine",
+            "capabilities": ReferenceEngine.capabilities(),
+        }))
         engine_cls = ReferenceEngine
     ecfg = EngineConfig(
         max_slots=args.max_slots, max_len=args.max_len,
         block_size=args.block_size, num_blocks=args.num_blocks,
         kv_dtype=args.kv_dtype, prefill_chunk=args.prefill_chunk,
+        tier_policy=args.tier_policy,
         spec_k=spec_k, spec_adaptive=args.spec_adaptive,
     )
 
-    def build_engine(weights, draft=None):
-        if engine_cls is SpeculativeEngine:
-            # self-speculation: default draft is the target itself (useful for
-            # dense-init smoke; real deployments pass an HPA-truncated draft)
-            return SpeculativeEngine(
-                cfg, weights, weights if draft is None else draft, ecfg
-            )
-        return engine_cls(cfg, weights, ecfg)
-
     if args.keep_ratios is None:
-        engine = build_engine(params)
+        bank = ModelBank.single(cfg, params)
+        engine = engine_cls(bank, ecfg)
         print(json.dumps({"budget": None, "fmt": "dense-init",
                           **serve_batch(engine, cfg.vocab_size, args.requests,
                                         args.max_new, args.seed, args.slo_ms)}))
         return
 
-    # one SALAAD state, a spectrum of served capacities — each budget deploys
-    # and serves through the same batched SLR-native programs; under
-    # speculation the SAME state also yields the draft (the elastic spectrum's
-    # low-budget end, --spec-budget)
-    for keep in [float(k) for k in args.keep_ratios.split(",")]:
-        slr_c, report = hpa_keep_ratio(slr, blocks, keep, args.kappa)
-        deployed = DeployedModel.build(cfg, params, slr_c, blocks, fmt=args.fmt)
-        draft = None
-        if engine_cls is SpeculativeEngine:
-            draft_keep = min(args.spec_budget, keep)
-            slr_d, _ = hpa_keep_ratio(slr, blocks, draft_keep, args.kappa)
-            draft = DeployedModel.build(cfg, params, slr_d, blocks, fmt=args.fmt)
-        engine = build_engine(deployed, draft)
-        stats = serve_batch(engine, cfg.vocab_size, args.requests, args.max_new,
-                            args.seed, args.slo_ms)
+    # one SALAAD state, ONE bank, a spectrum of served capacities — every
+    # budget is a tier of the same engine (the speculative engine serves its
+    # largest budget and drafts with --spec-budget)
+    keeps = sorted({float(k) for k in args.keep_ratios.split(",")},
+                   reverse=True)
+    if engine_cls is SpeculativeEngine:
+        target_keep = keeps[0]
+        draft_keep = min(args.spec_budget, target_keep)
+        dropped = [k for k in keeps[1:] if k != draft_keep]
+        if dropped:
+            print(json.dumps({
+                "note": "speculative mode serves ONE target tier: "
+                        f"keep={target_keep} verifies, keep={draft_keep} "
+                        f"(--spec-budget) drafts; --keep-ratios {dropped} "
+                        "not materialized",
+            }))
+        keeps = [target_keep] + ([draft_keep] if draft_keep < target_keep
+                                 else [])
+        ecfg.spec_draft_tier = -1                 # the cheapest tier drafts
+
+    # ONE HPA truncation + deployment per budget: the bank serves these
+    # views, and the SAME pass yields the per-tier accounting (no second
+    # truncation just for the report)
+    models, tier_rows = [], []
+    for keep in keeps:
+        slr_c, rep = hpa_keep_ratio(slr, blocks, keep, args.kappa)
+        models.append(
+            DeployedModel.build(cfg, params, slr_c, blocks, fmt=args.fmt)
+        )
         dep = deployment_report(params, slr_c, blocks)
-        print(json.dumps({
-            "budget": keep,
-            "fmt": args.fmt,
-            "slr_params": report["params_after"],
-            "served_bytes": deployed.param_bytes()["total_bytes"],
+        tier_rows.append({
+            "slr_params": rep["params_after"],
             "slr_total_bytes": dep["slr_total_bytes"],
             "compression": round(dep["compression"], 3),
-            **stats,
-        }))
+        })
+    bank = ModelBank(cfg, models, keeps=keeps)
+    for tier, row in zip(bank, tier_rows):
+        row.update(tier=tier.index, name=tier.name,
+                   served_bytes=tier.param_bytes)
+
+    engine = engine_cls(bank, ecfg)
+    tiers: tuple = (args.tier,)
+    if args.tier is None:
+        # round-robin across the budgets (SpeculativeEngine pins every slot
+        # to its target tier; its draft tier only drafts)
+        tiers = (None,) if engine_cls is SpeculativeEngine \
+            else tuple(range(len(bank)))
+    stats = serve_batch(engine, cfg.vocab_size, args.requests, args.max_new,
+                        args.seed, args.slo_ms, tiers=tiers)
+    print(json.dumps({
+        "fmt": args.fmt,
+        "bank": bank.report(),
+        "tier_policy": args.tier_policy,
+        **stats,
+        "tiers": tier_rows,
+    }))
 
 
 if __name__ == "__main__":

@@ -50,11 +50,28 @@ agnostic because every linear site goes through ``models.layers.apply_weight``.
 ``ReferenceEngine`` preserves the seed per-slot/per-token path: it is the
 baseline that ``benchmarks/serve_throughput.py`` measures against, and the
 fallback for cache families without per-slot lengths (ssm/hybrid/encdec).
+
+Elastic tiers (``serving/elastic.py``): every engine is constructed from a
+``ModelBank`` — the trained SLR weights held once, materialized as an ordered
+set of budget tiers — instead of one fixed-budget parameter tree. A request
+pins a tier at ``submit`` (or takes the engine default); each tick the engine
+groups decode-phase slots by their *effective* tier and runs one jitted
+decode per active tier over the SHARED cache (block table and pages are
+tier-agnostic, so a slot can switch tiers mid-stream with no KV copy, and
+each tier's program compiles exactly once, on first use). On the paged engine
+``tier_policy='pressure'`` runs a :class:`~repro.serving.elastic.
+TierController`: under page pressure the serving tier downshifts (cheaper
+steps, sooner completions, sooner frees) BEFORE the engine resorts to
+eviction, and upshifts when pressure clears. The old ``Engine(arch_cfg,
+params, ecfg)`` constructors still work through a shim that wraps the weights
+as a single-tier bank and emits a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
+import json
 import logging
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -63,6 +80,8 @@ import numpy as np
 
 from ..models import model as model_lib
 from ..models import transformer as transformer_lib
+from .deployed import DeployedModel
+from .elastic import ModelBank, TierController, TierControllerConfig
 
 log = logging.getLogger(__name__)
 
@@ -121,6 +140,7 @@ class Request:
     finished_at: float = 0.0
     token_times: list[float] = field(default_factory=list)
     deadline: float | None = None    # absolute WALL-CLOCK SLO deadline
+    tier: int = 0                    # requested ModelBank tier (0 = largest)
     evictions: int = 0
     # tokens this request emitted from a PREFILL/CHUNK program (one per
     # admission that reached the end of its prompt; a mid-prefill eviction
@@ -150,6 +170,14 @@ class EngineConfig:
     #                                    decode ticks (None = one-shot prefill;
     #                                    must be a positive multiple of
     #                                    block_size)
+    # elastic tiers (serving/elastic.py):
+    default_tier: int = 0           # bank tier used when submit(tier=None)
+    tier_policy: str = "static"     # static | pressure (paged engine only:
+    #                                 downshift the serving tier under page
+    #                                 pressure before resorting to eviction)
+    tier_target_free: float = 0.25  # pressure setpoint: free-page fraction
+    tier_gain: float = 4.0          # controller integral gain (tiers/error)
+    tier_ema: float = 0.5           # smoothing of the free-fraction signal
     # speculative engine only (serving/speculative.py):
     spec_k: int = 0                 # draft tokens per tick; 0 = speculation off
     spec_adaptive: bool = False     # adapt k from observed acceptance rate
@@ -158,12 +186,72 @@ class EngineConfig:
     spec_draft_kv_dtype: str = "bfloat16"  # draft page-pool payload (its own,
     #                                        smaller pool; never affects the
     #                                        target distribution)
+    spec_target_tier: int = 0       # bank tier the verifier serves
+    spec_draft_tier: int = -1       # bank tier that drafts (-1 = cheapest)
 
-
-def _as_params(params_or_deployed):
-    """Accept a raw param tree or a serving.deployed.DeployedModel."""
-    return getattr(params_or_deployed, "params", None) \
-        if hasattr(params_or_deployed, "fmt") else params_or_deployed
+    def __post_init__(self):
+        """Validate at CONSTRUCTION: a bad config used to surface as a
+        downstream shape/jit failure deep inside the first prefill (or worse,
+        as a silently-degenerate pool). Every check here raises a ValueError
+        that names the field and the constraint."""
+        for name in ("max_slots", "max_len", "block_size", "min_bucket"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"{name}={v!r} must be a positive int")
+        if self.num_blocks is not None and self.num_blocks < 1:
+            raise ValueError(
+                f"num_blocks={self.num_blocks} must be positive (or None for "
+                f"a max_slots * max_len worth of pages)"
+            )
+        if self.kv_dtype not in _KV_DTYPES and self.kv_dtype != "int8":
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r}; expected one of "
+                f"{sorted(_KV_DTYPES) + ['int8']}"
+            )
+        if self.evict_policy not in _EVICT_POLICIES:
+            raise ValueError(
+                f"unknown evict_policy {self.evict_policy!r}; "
+                f"expected one of {_EVICT_POLICIES}"
+            )
+        if self.decode_reserve is not None and self.decode_reserve < 1:
+            raise ValueError(
+                f"decode_reserve={self.decode_reserve} must be positive "
+                f"(or None for one block)"
+            )
+        if self.prefill_chunk is not None and (
+            self.prefill_chunk < 1 or self.prefill_chunk % self.block_size
+        ):
+            raise ValueError(
+                f"prefill_chunk={self.prefill_chunk} must be a positive "
+                f"multiple of block_size={self.block_size} (chunks scatter "
+                f"whole pages)"
+            )
+        if self.tier_policy not in ("static", "pressure"):
+            raise ValueError(
+                f"unknown tier_policy {self.tier_policy!r}; "
+                f"expected 'static' or 'pressure'"
+            )
+        if not 0.0 < self.tier_target_free < 1.0:
+            raise ValueError(
+                f"tier_target_free={self.tier_target_free} outside (0, 1)"
+            )
+        if self.tier_gain <= 0:
+            raise ValueError(f"tier_gain={self.tier_gain} must be positive")
+        if not 0.0 <= self.tier_ema < 1.0:
+            raise ValueError(f"tier_ema={self.tier_ema} outside [0, 1)")
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k={self.spec_k} must be >= 0")
+        if self.spec_draft_mode not in ("auto", "parallel", "sequential"):
+            raise ValueError(
+                f"unknown spec_draft_mode {self.spec_draft_mode!r}; "
+                f"expected auto | parallel | sequential"
+            )
+        if (self.spec_draft_kv_dtype not in _KV_DTYPES
+                and self.spec_draft_kv_dtype != "int8"):
+            raise ValueError(
+                f"unknown spec_draft_kv_dtype {self.spec_draft_kv_dtype!r}; "
+                f"expected one of {sorted(_KV_DTYPES) + ['int8']}"
+            )
 
 
 def decode_emitted_tokens(done: list[Request]) -> int:
@@ -177,22 +265,104 @@ def decode_emitted_tokens(done: list[Request]) -> int:
     return sum(len(r.out_tokens) - r.prefill_emitted for r in done)
 
 
+def _resolve_engine_args(name: str, model, params=None, ecfg=None):
+    """Resolve the Engine-protocol constructor contract.
+
+    New contract: ``Engine(bank, ecfg)`` where ``bank`` is a
+    :class:`~repro.serving.elastic.ModelBank` (a bare ``DeployedModel`` is
+    accepted as a single-tier convenience). The deprecated ``Engine(arch_cfg,
+    params, ecfg)`` form still works: the weights are wrapped as a
+    single-tier bank and a ``DeprecationWarning`` is emitted.
+    """
+    if isinstance(model, (ModelBank, DeployedModel)):
+        if params is not None and ecfg is not None:
+            raise TypeError(
+                f"{name}(bank, ecfg) takes no third argument; per-tier "
+                "weights live in the ModelBank"
+            )
+        cfg_arg = params if params is not None else ecfg  # positional OR ecfg=
+        if cfg_arg is not None and not isinstance(cfg_arg, EngineConfig):
+            raise TypeError(
+                f"{name}(bank, ecfg): second argument must be an "
+                f"EngineConfig, got {type(cfg_arg).__name__}"
+            )
+        bank = model if isinstance(model, ModelBank) \
+            else ModelBank.single(model.cfg, model)
+        return bank, cfg_arg if cfg_arg is not None else EngineConfig()
+    if not hasattr(model, "family"):
+        raise TypeError(
+            f"{name} expects a ModelBank (serving.elastic) or DeployedModel "
+            f"first argument, got {type(model).__name__}"
+        )
+    if params is None or isinstance(params, EngineConfig):
+        raise TypeError(
+            f"{name}(arch_cfg, params, ecfg) is missing the weights argument"
+        )
+    warnings.warn(
+        f"{name}(arch_cfg, params, ecfg) is deprecated: build a ModelBank "
+        f"(serving/elastic.py) and construct {name}(bank, ecfg) — one bank "
+        "serves the whole budget spectrum",
+        DeprecationWarning, stacklevel=3,
+    )
+    return ModelBank.single(model, params), \
+        ecfg if ecfg is not None else EngineConfig()
+
+
+def _bank_tier_state(bank: ModelBank, ecfg: EngineConfig):
+    """Per-tier parameter list + validated default tier, shared by every
+    engine's constructor (keeps the error contract in one place)."""
+    tier_params = [t.params for t in bank]
+    try:
+        default = bank.resolve(ecfg.default_tier)
+    except ValueError as e:
+        raise ValueError(f"default_tier: {e}") from None
+    return tier_params, default
+
+
+def _resolve_request_tier(bank: ModelBank, default: int,
+                          tier: int | None) -> int:
+    """Validated bank tier for a request (None = the engine default).
+    Submit-time tier errors are RequestRejected, per the Engine protocol."""
+    if tier is None:
+        return default
+    try:
+        return bank.resolve(tier)
+    except ValueError as e:
+        raise RequestRejected(str(e)) from None
+
+
+def _capability_error(engine_cls, family: str, missing: list[str]):
+    """An :class:`EngineCapabilityError` that carries the engine's structured
+    ``capabilities()`` dict, so callers (and ``launch/serve.py`` users) see
+    WHICH features are paged-only instead of a bare string."""
+    caps = engine_cls.capabilities()
+    return EngineCapabilityError(
+        f"family {family!r} serves through {engine_cls.__name__}; requested "
+        f"feature(s) unavailable: {', '.join(missing)}. Engine capabilities: "
+        f"{json.dumps(caps, sort_keys=True)}"
+    )
+
+
 class ServingEngine:
     """Single-host batched slot-padded engine; the multi-pod path swaps the
     jitted fns for their pjit'd versions (same signatures — launch/serve.py)."""
 
     _speculative = False   # only serving.speculative.SpeculativeEngine drafts
     _chunked = False       # only PagedServingEngine prefills chunk-by-chunk
+    _paged = False         # only PagedServingEngine has a page pool (the
+    #                        pressure tier policy needs one)
 
-    def __init__(self, arch_cfg, params, ecfg: EngineConfig = EngineConfig()):
-        self._init_common(arch_cfg, params, ecfg)
+    def __init__(self, model, params=None, ecfg: EngineConfig | None = None):
+        bank, ecfg = _resolve_engine_args(type(self).__name__, model, params,
+                                          ecfg)
+        self._init_common(bank, ecfg)
         if ecfg.kv_dtype == "int8":
             raise ValueError(
                 "int8 KV needs the paged engine (PagedServingEngine stores "
                 "quantized pages); the contiguous engine serves float caches"
             )
         cache = model_lib.init_cache(
-            arch_cfg, ecfg.max_slots, ecfg.max_len,
+            self.cfg, ecfg.max_slots, ecfg.max_len,
             dtype=_KV_DTYPES[ecfg.kv_dtype],
         )
         self.cache = cache._replace(
@@ -201,7 +371,30 @@ class ServingEngine:
         self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(4,))
 
-    def _init_common(self, arch_cfg, params, ecfg: EngineConfig):
+    @classmethod
+    def capabilities(cls) -> dict:
+        """Structured capability report (Engine protocol): which cache
+        families this engine serves, its KV layout, and feature availability
+        — the data behind ``EngineCapabilityError`` messages and the
+        ``launch/serve.py --help`` table."""
+        return {
+            "engine": cls.__name__,
+            "families": list(BATCHED_FAMILIES),
+            "kv": "contiguous",
+            "features": {
+                "kv_dtype": ["float32", "bfloat16"],
+                "continuous_batching": True,
+                "deadlines_edf": True,
+                "chunked_prefill": False,
+                "eviction_resume": False,
+                "speculative": False,
+                "elastic_tiers": True,
+                "tier_pressure_controller": False,
+            },
+        }
+
+    def _init_common(self, bank: ModelBank, ecfg: EngineConfig):
+        arch_cfg = bank.cfg
         if arch_cfg.family not in BATCHED_FAMILIES:
             raise ValueError(
                 f"batched engine needs a KV-cache family, got {arch_cfg.family!r};"
@@ -212,25 +405,38 @@ class ServingEngine:
             # consumed by serving.speculative.SpeculativeEngine
             raise EngineCapabilityError(
                 f"{type(self).__name__} does not speculate "
-                f"(spec_k={ecfg.spec_k} requested); use SpeculativeEngine"
+                f"(spec_k={ecfg.spec_k} requested); use SpeculativeEngine. "
+                f"Engine capabilities: "
+                f"{json.dumps(self.capabilities(), sort_keys=True)}"
             )
         if ecfg.prefill_chunk is not None and not self._chunked:
             raise EngineCapabilityError(
                 f"{type(self).__name__} prefills in one shot "
                 f"(prefill_chunk={ecfg.prefill_chunk} requested); chunked "
-                "prefill needs the paged engine"
+                "prefill needs the paged engine. Engine capabilities: "
+                f"{json.dumps(self.capabilities(), sort_keys=True)}"
             )
-        if ecfg.kv_dtype not in _KV_DTYPES and ecfg.kv_dtype != "int8":
-            raise ValueError(f"unknown kv_dtype {ecfg.kv_dtype!r}")
-        if ecfg.evict_policy not in _EVICT_POLICIES:
-            raise ValueError(
-                f"unknown evict_policy {ecfg.evict_policy!r}; "
-                f"expected one of {_EVICT_POLICIES}"
+        if ecfg.tier_policy == "pressure" and not self._paged:
+            raise EngineCapabilityError(
+                f"{type(self).__name__} has no page pool to feel pressure "
+                "from (tier_policy='pressure' requested); the tier "
+                "controller needs the paged engine. Engine capabilities: "
+                f"{json.dumps(self.capabilities(), sort_keys=True)}"
             )
         self.cfg = arch_cfg
         self.ecfg = ecfg
-        deployed = _as_params(params)
-        self.params = deployed if deployed is not None else params
+        self.bank = bank
+        self._tier_params, self._default_tier = _bank_tier_state(bank, ecfg)
+        # back-compat alias: the default tier's tree (the speculative engine
+        # re-points it at the verify target's tier)
+        self.params = self._tier_params[self._default_tier]
+        # effective tier per slot (requested tier + controller downshift),
+        # refreshed every tick; decode groups by this
+        self._slot_tier = np.zeros(ecfg.max_slots, np.int64)
+        self._tier_shift = 0
+        self.tier_controller: TierController | None = None
+        self.tier_switches = 0      # mid-stream effective-tier changes
+        self.downshift_ticks = 0    # ticks served with a positive shift
         self._queue: list[Request] = []
         self._active: dict[int, Request] = {}   # slot -> request
         # slot -> tokens prefilled so far; a slot present here is MID-PREFILL
@@ -253,17 +459,51 @@ class ServingEngine:
     # ------------------------------------------------------------ intake ---
 
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
-               deadline: float | None = None) -> int:
+               deadline: float | None = None,
+               tier: int | None = None) -> int:
         self._validate(prompt, max_new_tokens)
         self._uid += 1
         self._queue.append(
             Request(self._uid, list(prompt), max_new_tokens,
-                    submitted_at=_now(), deadline=deadline)
+                    submitted_at=_now(), deadline=deadline,
+                    tier=self._resolve_tier(tier))
         )
         return self._uid
 
     def _validate(self, prompt: list[int], max_new_tokens: int):
         _validate_request(prompt, max_new_tokens, self.ecfg.max_len)
+
+    def _resolve_tier(self, tier: int | None) -> int:
+        return _resolve_request_tier(self.bank, self._default_tier, tier)
+
+    # ------------------------------------------------------------- tiers ---
+
+    def _effective_tier(self, req: Request) -> int:
+        """Requested tier plus the controller's downshift, clamped to the
+        cheap end of the bank (downshift only ever moves toward smaller
+        capacities; it never upgrades a request past what it asked for)."""
+        return min(req.tier + self._tier_shift, len(self._tier_params) - 1)
+
+    def _update_tier_shift(self):
+        """Hook: the paged engine integrates page pressure here."""
+
+    def _refresh_slot_tiers(self):
+        """Recompute each active slot's effective tier. A change is pure
+        host-side bookkeeping — the KV cache is tier-agnostic (no copy) and
+        every tier's program is already compiled after its first use, so a
+        mid-stream switch costs nothing on device."""
+        for slot, req in self._active.items():
+            eff = self._effective_tier(req)
+            if eff != self._slot_tier[slot]:
+                self.tier_switches += 1
+                self._slot_tier[slot] = eff
+
+    def _tier_groups(self, slots) -> list[tuple[int, list[int]]]:
+        """Active slots grouped by effective tier (ascending tier index)."""
+        groups: dict[int, list[int]] = {}
+        for s in slots:
+            groups.setdefault(int(self._slot_tier[s]), []).append(s)
+        return sorted(groups.items())
 
     def _order_queue(self):
         """Earliest-deadline-first admission order, shared by BOTH batched
@@ -345,37 +585,43 @@ class ServingEngine:
         return min(b, self.ecfg.max_len)
 
     def _admit(self, free: list[int], done: list[Request], step: int):
-        """Batch all admissible queued requests through one prefill call
-        (earliest deadline first — see ``_order_queue``)."""
+        """Batch all admissible queued requests through one prefill call PER
+        EFFECTIVE TIER (earliest deadline first — see ``_order_queue``; a
+        single-tier bank degenerates to exactly the old one-call admit)."""
         take = min(len(free), len(self._queue))
         if not take:
             return
         self._order_queue()
         reqs = [self._queue.pop(0) for _ in range(take)]
         s = self.ecfg.max_slots
-        bucket = self._bucket(max(len(r.prompt) for r in reqs))
-        tokens = np.zeros((s, bucket), np.int32)
-        lengths = np.ones((s,), np.int32)        # padded rows: 1 valid token
-        slot_ids = np.full((s,), s, np.int32)    # out-of-range => dropped
-        slots = []
         now = _now()
-        for i, req in enumerate(reqs):
+        admitted: list[tuple[int, Request]] = []
+        for req in reqs:
             slot = free.pop()
-            slots.append(slot)
             req.admitted_at = now
             self._active[slot] = req
-            tokens[i, : len(req.prompt)] = req.prompt
-            lengths[i] = len(req.prompt)
-            slot_ids[i] = slot
-        first, self.cache = self._prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-            jnp.asarray(slot_ids), self.cache, jnp.asarray(step, jnp.int32),
-        )
-        self.prefill_calls += 1
-        firsts = np.asarray(first)               # one fetch per admit batch
-        for i, (slot, req) in enumerate(zip(slots, reqs)):
-            req.prefill_emitted += 1
-            self._record(slot, req, int(firsts[i]), free, done)
+            self._slot_tier[slot] = self._effective_tier(req)
+            admitted.append((slot, req))
+        for tier, slots in self._tier_groups(slot for slot, _ in admitted):
+            group = [(slot, self._active[slot]) for slot in slots]
+            bucket = self._bucket(max(len(r.prompt) for _, r in group))
+            tokens = np.zeros((s, bucket), np.int32)
+            lengths = np.ones((s,), np.int32)     # padded rows: 1 valid token
+            slot_ids = np.full((s,), s, np.int32)  # out-of-range => dropped
+            for i, (slot, req) in enumerate(group):
+                tokens[i, : len(req.prompt)] = req.prompt
+                lengths[i] = len(req.prompt)
+                slot_ids[i] = slot
+            first, self.cache = self._prefill(
+                self._tier_params[tier], jnp.asarray(tokens),
+                jnp.asarray(lengths), jnp.asarray(slot_ids), self.cache,
+                jnp.asarray(step, jnp.int32),
+            )
+            self.prefill_calls += 1
+            firsts = np.asarray(first)           # one fetch per tier group
+            for i, (slot, req) in enumerate(group):
+                req.prefill_emitted += 1
+                self._record(slot, req, int(firsts[i]), free, done)
 
     def _record(self, slot: int, req: Request, tok: int, free, done):
         now = _now()
@@ -410,9 +656,11 @@ class ServingEngine:
         return self.cache
 
     def step(self) -> list[Request]:
-        """ONE engine tick: admit whatever fits, advance mid-prefill slots by
-        one chunk, then one jitted decode step over all decode-phase slots.
-        Returns requests that finished this tick."""
+        """ONE engine tick: admit whatever fits, refresh effective tiers
+        (pressure controller first — downshift precedes any eviction),
+        advance mid-prefill slots by one chunk, then one jitted decode step
+        per active tier over the decode-phase slots. Returns requests that
+        finished this tick."""
         done: list[Request] = []
         s = self.ecfg.max_slots
         self._steps += 1
@@ -420,6 +668,8 @@ class ServingEngine:
         self._admit(free, done, self._steps)
         if not self._active:
             return done
+        self._update_tier_shift()
+        self._refresh_slot_tiers()
         self._prefill_progress(free, done, self._steps)
         self._pre_decode(free, done)
         active = np.zeros((s,), bool)
@@ -433,22 +683,33 @@ class ServingEngine:
     def _decode_tick(self, active: np.ndarray, free: list[int],
                      done: list[Request]):
         """Device portion of a tick (hook: the speculative engine replaces
-        this with its draft + k-wide verify program)."""
+        this with its draft + k-wide verify program): ONE jitted decode per
+        active tier, every call masked to its tier's slots over the shared
+        cache. A single-tier bank degenerates to exactly one call per tick;
+        each tier's program compiles once, on first use, so a slot switching
+        tiers mid-stream never triggers a retrace."""
         s = self.ecfg.max_slots
         tokens = np.zeros((s, 1), np.int32)
-        for slot in self._active:
-            if slot not in self._progress:
-                tokens[slot, 0] = self._last_token[slot]
-        nxt, self.cache = self._decode(
-            self.params, jnp.asarray(tokens), self._device_cache(),
-            jnp.asarray(active), jnp.asarray(self._steps, jnp.int32),
-        )
-        self.decode_calls += 1
-        toks = np.asarray(nxt)               # ONE host sync per step
+        decode_slots = [int(x) for x in np.nonzero(active)[0]]
+        for slot in decode_slots:
+            tokens[slot, 0] = self._last_token[slot]
+        tok_dev = jnp.asarray(tokens)
+        step_dev = jnp.asarray(self._steps, jnp.int32)
+        out = np.zeros((s,), np.int64)
+        for tier, slots in self._tier_groups(decode_slots):
+            mask = np.zeros((s,), bool)
+            mask[slots] = True
+            nxt, self.cache = self._decode(
+                self._tier_params[tier], tok_dev, self._device_cache(),
+                jnp.asarray(mask), step_dev,
+            )
+            self.decode_calls += 1
+            toks = np.asarray(nxt)           # one host sync per active tier
+            out[slots] = toks[slots]
         for slot, req in list(self._active.items()):
             if slot in self._progress:
                 continue
-            self._record(slot, req, int(toks[slot]), free, done)
+            self._record(slot, req, int(out[slot]), free, done)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         """Drive everything to completion (batch mode)."""
@@ -535,9 +796,13 @@ class PagedServingEngine(ServingEngine):
     """
 
     _chunked = True
+    _paged = True
 
-    def __init__(self, arch_cfg, params, ecfg: EngineConfig = EngineConfig()):
-        self._init_common(arch_cfg, params, ecfg)
+    def __init__(self, model, params=None, ecfg: EngineConfig | None = None):
+        bank, ecfg = _resolve_engine_args(type(self).__name__, model, params,
+                                          ecfg)
+        self._init_common(bank, ecfg)
+        arch_cfg = self.cfg
         bs = ecfg.block_size
         assert bs >= 1
         self._bs = bs
@@ -568,9 +833,41 @@ class PagedServingEngine(ServingEngine):
         self._ptarget: dict[int, int] = {}           # slot -> prefill target len
         self.chunk_calls = 0
         self.chunk_traces = 0
+        if ecfg.tier_policy == "pressure":
+            self.tier_controller = TierController(
+                len(self.bank),
+                TierControllerConfig(
+                    target_free_frac=ecfg.tier_target_free,
+                    gain=ecfg.tier_gain, ema=ecfg.tier_ema,
+                ),
+            )
         self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(5,))
         self._chunk_prog = jax.jit(self._chunk_fn, donate_argnums=(5,))
+
+    @classmethod
+    def capabilities(cls) -> dict:
+        caps = ServingEngine.capabilities.__func__(cls)
+        caps["kv"] = "paged"
+        caps["features"].update(
+            kv_dtype=["float32", "bfloat16", "int8"],
+            chunked_prefill=True,
+            eviction_resume=True,
+            tier_pressure_controller=True,
+        )
+        return caps
+
+    def _update_tier_shift(self):
+        """Integrate page pressure into the serving-tier downshift (BEFORE
+        ``_pre_decode`` can evict anyone — the controller spends capacity
+        quality first, requests last)."""
+        if self.tier_controller is None:
+            return
+        self._tier_shift = self.tier_controller.update(
+            self.allocator.free_blocks / self.num_blocks
+        )
+        if self._tier_shift > 0:
+            self.downshift_ticks += 1
 
     # ------------------------------------------------------------ intake ---
 
@@ -664,6 +961,7 @@ class PagedServingEngine(ServingEngine):
             slot = free.pop()
             req.admitted_at = _now()
             self._active[slot] = req
+            self._slot_tier[slot] = self._effective_tier(req)
             self._pages[slot] = pages
             self._table[slot, : len(pages)] = pages
             self._table_dirty = True
@@ -679,29 +977,35 @@ class PagedServingEngine(ServingEngine):
             return
 
         s = self.ecfg.max_slots
-        bucket = self._bucket(max(plen for _, _, _, plen in admitted))
-        nb_bucket = bucket // self._bs
-        tokens = np.zeros((s, bucket), np.int32)
-        lengths = np.ones((s,), np.int32)
-        slot_ids = np.full((s,), s, np.int32)
-        page_map = np.full((s, nb_bucket), self.num_blocks, np.int32)
-        for i, (slot, req, pages, plen) in enumerate(admitted):
-            ptoks = req.prompt + req.out_tokens
-            tokens[i, :plen] = ptoks
-            lengths[i] = plen
-            slot_ids[i] = slot
-            prompt_blocks = -(-plen // self._bs)
-            page_map[i, :prompt_blocks] = pages[:prompt_blocks]
-        firsts = self._prefill_admitted(tokens, lengths, slot_ids, page_map, step)
-        for i, (slot, req, _, _) in enumerate(admitted):
-            req.prefill_emitted += 1
-            self._record(slot, req, int(firsts[i]), free, done)
+        by_slot = {slot: (req, pages, plen) for slot, req, pages, plen in admitted}
+        for tier, slots in self._tier_groups(by_slot):
+            group = [(slot, *by_slot[slot]) for slot in slots]
+            bucket = self._bucket(max(plen for _, _, _, plen in group))
+            nb_bucket = bucket // self._bs
+            tokens = np.zeros((s, bucket), np.int32)
+            lengths = np.ones((s,), np.int32)
+            slot_ids = np.full((s,), s, np.int32)
+            page_map = np.full((s, nb_bucket), self.num_blocks, np.int32)
+            for i, (slot, req, pages, plen) in enumerate(group):
+                ptoks = req.prompt + req.out_tokens
+                tokens[i, :plen] = ptoks
+                lengths[i] = plen
+                slot_ids[i] = slot
+                prompt_blocks = -(-plen // self._bs)
+                page_map[i, :prompt_blocks] = pages[:prompt_blocks]
+            firsts = self._prefill_admitted(
+                tokens, lengths, slot_ids, page_map, step, tier
+            )
+            for i, (slot, req, _, _) in enumerate(group):
+                req.prefill_emitted += 1
+                self._record(slot, req, int(firsts[i]), free, done)
 
-    def _prefill_admitted(self, tokens, lengths, slot_ids, page_map, step):
+    def _prefill_admitted(self, tokens, lengths, slot_ids, page_map, step,
+                          tier: int = 0):
         """Device portion of admission (hook: the speculative engine also
         prefills the draft page pools here). Returns first tokens (host)."""
         first, self.cache = self._prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            self._tier_params[tier], jnp.asarray(tokens), jnp.asarray(lengths),
             jnp.asarray(slot_ids), jnp.asarray(page_map), self.cache,
             jnp.asarray(step, jnp.int32),
         )
@@ -711,8 +1015,9 @@ class PagedServingEngine(ServingEngine):
     def _prefill_progress(self, free: list[int], done: list[Request],
                           step: int):
         """Advance every mid-prefill slot by ONE chunk (a single jitted call
-        covers all of them). Per slot: reserve pages for the chunk (plus the
-        decode headroom when it is the final chunk). Prefill growth never
+        per active tier covers all of them). Per slot: reserve pages for the
+        chunk (plus the decode headroom when it is the final chunk). Prefill
+        growth never
         evicts — a slot whose chunk cannot get pages STALLS at its last
         completed chunk and resumes once decode-phase slots finish and free
         pages (eviction here would let two contending prefills ping-pong each
@@ -771,36 +1076,39 @@ class PagedServingEngine(ServingEngine):
         if not ready:
             return
         s = self.ecfg.max_slots
-        tokens = np.zeros((s, self._chunk), np.int32)
-        counts = np.zeros((s,), np.int32)
-        slot_ids = np.full((s,), s, np.int32)
-        starts = np.zeros((s,), np.int32)
-        for slot in ready:
-            req = self._active[slot]
-            p = self._progress[slot]
-            c = min(self._chunk, self._ptarget[slot] - p)
-            ptoks = req.prompt + req.out_tokens
-            tokens[slot, :c] = ptoks[p : p + c]
-            counts[slot] = c
-            slot_ids[slot] = slot
-            starts[slot] = p
-        firsts = self._chunk_call(tokens, counts, slot_ids, starts, step)
-        for slot in ready:
-            req = self._active.get(slot)
-            if req is None:
-                continue
-            self._progress[slot] += int(counts[slot])
-            if self._progress[slot] >= self._ptarget[slot]:
-                del self._progress[slot]
-                del self._ptarget[slot]
-                req.prefill_emitted += 1
-                self._record(slot, req, int(firsts[slot]), free, done)
+        for tier, tier_slots in self._tier_groups(ready):
+            tokens = np.zeros((s, self._chunk), np.int32)
+            counts = np.zeros((s,), np.int32)
+            slot_ids = np.full((s,), s, np.int32)
+            starts = np.zeros((s,), np.int32)
+            for slot in tier_slots:
+                req = self._active[slot]
+                p = self._progress[slot]
+                c = min(self._chunk, self._ptarget[slot] - p)
+                ptoks = req.prompt + req.out_tokens
+                tokens[slot, :c] = ptoks[p : p + c]
+                counts[slot] = c
+                slot_ids[slot] = slot
+                starts[slot] = p
+            firsts = self._chunk_call(tokens, counts, slot_ids, starts, step,
+                                      tier)
+            for slot in tier_slots:
+                req = self._active.get(slot)
+                if req is None:
+                    continue
+                self._progress[slot] += int(counts[slot])
+                if self._progress[slot] >= self._ptarget[slot]:
+                    del self._progress[slot]
+                    del self._ptarget[slot]
+                    req.prefill_emitted += 1
+                    self._record(slot, req, int(firsts[slot]), free, done)
 
-    def _chunk_call(self, tokens, counts, slot_ids, starts, step):
+    def _chunk_call(self, tokens, counts, slot_ids, starts, step,
+                    tier: int = 0):
         """Device portion of a chunk tick (hook: the speculative engine also
         runs the draft's chunk here). Returns sampled tokens (host)."""
         first, self.cache = self._chunk_prog(
-            self.params, jnp.asarray(tokens), jnp.asarray(counts),
+            self._tier_params[tier], jnp.asarray(tokens), jnp.asarray(counts),
             jnp.asarray(slot_ids), jnp.asarray(starts), self._device_cache(),
             jnp.asarray(step, jnp.int32),
         )
@@ -890,9 +1198,16 @@ class ReferenceEngine:
 
     Kept as (a) the measured baseline for ``benchmarks/serve_throughput.py``
     and (b) the serving path for cache families without per-slot lengths.
+    Implements the :class:`~repro.serving.elastic.Engine` protocol, including
+    per-request bank tiers (each slot decodes with its requested tier's
+    parameter tree — no pressure controller, there is no page pool to feel
+    pressure from).
     """
 
-    def __init__(self, arch_cfg, params, ecfg: EngineConfig = EngineConfig()):
+    def __init__(self, model, params=None, ecfg: EngineConfig | None = None):
+        bank, ecfg = _resolve_engine_args(type(self).__name__, model, params,
+                                          ecfg)
+        arch_cfg = bank.cfg
         missing = []
         if ecfg.kv_dtype != "float32":
             missing.append(f"kv_dtype={ecfg.kv_dtype!r}")
@@ -902,12 +1217,12 @@ class ReferenceEngine:
             missing.append(
                 f"chunked prefill (prefill_chunk={ecfg.prefill_chunk})"
             )
-        if missing:
-            raise EngineCapabilityError(
-                f"family {arch_cfg.family!r} serves through ReferenceEngine "
-                f"(per-slot loop, contiguous float32 cache); paged-only "
-                f"feature(s) requested: {', '.join(missing)}"
+        if ecfg.tier_policy == "pressure":
+            missing.append(
+                f"tier_policy={ecfg.tier_policy!r} (page-pressure controller)"
             )
+        if missing:
+            raise _capability_error(type(self), arch_cfg.family, missing)
         log.info(
             "ReferenceEngine serving family %r: per-slot per-token loop, "
             "contiguous float32 cache — no paged features (kv_dtype, "
@@ -916,11 +1231,13 @@ class ReferenceEngine:
         )
         self.cfg = arch_cfg
         self.ecfg = ecfg
-        deployed = _as_params(params)
-        self.params = deployed if deployed is not None else params
+        self.bank = bank
+        self._tier_params, self._default_tier = _bank_tier_state(bank, ecfg)
+        self.params = self._tier_params[self._default_tier]
         self._queue: list[Request] = []
         self._active: dict[int, Request] = {}   # slot -> request
         self._uid = 0
+        self._slot_len = [0] * ecfg.max_slots
 
         self.cache = model_lib.init_cache(
             arch_cfg, ecfg.max_slots, ecfg.max_len, dtype=jnp.float32
@@ -929,15 +1246,35 @@ class ReferenceEngine:
             lambda p, tok, cache: model_lib.decode_step(p, tok, cache, arch_cfg)
         )
 
+    @classmethod
+    def capabilities(cls) -> dict:
+        return {
+            "engine": cls.__name__,
+            "families": ["dense", "moe", "vlm", "ssm", "hybrid", "encdec"],
+            "kv": "contiguous",
+            "features": {
+                "kv_dtype": ["float32"],
+                "continuous_batching": False,
+                "deadlines_edf": False,
+                "chunked_prefill": False,
+                "eviction_resume": False,
+                "speculative": False,
+                "elastic_tiers": True,
+                "tier_pressure_controller": False,
+            },
+        }
+
     # ------------------------------------------------------------ intake ---
 
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
-               deadline: float | None = None) -> int:
+               deadline: float | None = None,
+               tier: int | None = None) -> int:
         _validate_request(prompt, max_new_tokens, self.ecfg.max_len)
+        t = _resolve_request_tier(self.bank, self._default_tier, tier)
         self._uid += 1
         self._queue.append(
             Request(self._uid, list(prompt), max_new_tokens,
-                    submitted_at=_now(), deadline=deadline)
+                    submitted_at=_now(), deadline=deadline, tier=t)
         )
         return self._uid
 
@@ -954,48 +1291,55 @@ class ReferenceEngine:
         for tok in req.prompt[:-1]:
             self._step_slot(slot, tok)
 
-    def run(self, max_steps: int = 10_000) -> list[Request]:
-        self._slot_len = getattr(self, "_slot_len", [0] * self.ecfg.max_slots)
+    def step(self) -> list[Request]:
+        """One engine tick (Engine protocol): admit into free slots, then one
+        token for every active slot (the seed per-slot loop — one device call
+        and one host sync per slot)."""
         done: list[Request] = []
         free = [s for s in range(self.ecfg.max_slots) if s not in self._active]
+        while self._queue and free:
+            slot = free.pop()
+            req = self._queue.pop(0)
+            self._active[slot] = req
+            self._prefill_into_slot(slot, req)
+        for slot, req in list(self._active.items()):
+            last = (req.out_tokens or req.prompt)[-1]
+            nxt = self._step_slot(slot, last)
+            req.out_tokens.append(int(nxt))
+            now = _now()
+            req.token_times.append(now)
+            if req.first_token_at == 0.0:
+                req.first_token_at = now
+            if (
+                len(req.out_tokens) >= req.max_new_tokens
+                or (self.ecfg.eos_token is not None and nxt == self.ecfg.eos_token)
+            ):
+                req.done = True
+                req.finished_at = now
+                done.append(req)
+                del self._active[slot]
+        return done
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        done: list[Request] = []
         steps = 0
-        while (self._queue or self._active) and steps < max_steps:
+        while self.has_work and steps < max_steps:
             steps += 1
-            while self._queue and free:
-                slot = free.pop()
-                req = self._queue.pop(0)
-                self._active[slot] = req
-                self._prefill_into_slot(slot, req)
-            if not self._active:
-                continue
-            for slot, req in list(self._active.items()):
-                last = (req.out_tokens or req.prompt)[-1]
-                nxt = self._step_slot(slot, last)
-                req.out_tokens.append(int(nxt))
-                now = _now()
-                req.token_times.append(now)
-                if req.first_token_at == 0.0:
-                    req.first_token_at = now
-                if (
-                    len(req.out_tokens) >= req.max_new_tokens
-                    or (self.ecfg.eos_token is not None and nxt == self.ecfg.eos_token)
-                ):
-                    req.done = True
-                    req.finished_at = now
-                    done.append(req)
-                    del self._active[slot]
-                    free.append(slot)
+            done.extend(self.step())
         return done
 
     def _step_slot(self, slot: int, token: int) -> int:
-        """One decode step for one slot (per-slot cache view + write-back)."""
+        """One decode step for one slot (per-slot cache view + write-back),
+        with the slot's REQUESTED tier's parameters — each tier's program
+        traces once, like any other shape."""
         sub_cache = jax.tree.map(
             lambda x: x[:, slot : slot + 1] if x.ndim >= 2 and x.shape[1] == self.ecfg.max_slots else x,
             self.cache,
         )
         sub_cache = sub_cache._replace(length=jnp.asarray(self._slot_len[slot], jnp.int32))
         tok = jnp.asarray([[token]], jnp.int32)
-        logits, new_sub = self._decode(self.params, tok, sub_cache)
+        params = self._tier_params[self._active[slot].tier]
+        logits, new_sub = self._decode(params, tok, sub_cache)
 
         def write_back(full, sub):
             if full.ndim >= 2 and full.shape[1] == self.ecfg.max_slots:

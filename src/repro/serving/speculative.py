@@ -55,6 +55,8 @@ error between observed per-slot acceptance and a target rate, clamped to
 """
 from __future__ import annotations
 
+import json
+import warnings
 from dataclasses import dataclass
 
 import jax
@@ -63,7 +65,15 @@ import numpy as np
 
 from ..models import model as model_lib
 from ..models import transformer as transformer_lib
-from .engine import EngineConfig, PagedServingEngine, _as_params
+from .deployed import DeployedModel
+from .elastic import ModelBank
+from .engine import (
+    EngineCapabilityError,
+    EngineConfig,
+    PagedServingEngine,
+    Request,
+    RequestRejected,
+)
 
 __all__ = [
     "SpeculativeEngine",
@@ -192,22 +202,70 @@ class SpeculativeEngine(PagedServingEngine):
     same SLR weights proposes k tokens per slot, the full-budget target
     verifies them all in one jitted k-wide paged step.
 
-    ``params`` is the full-budget target (raw tree or DeployedModel);
-    ``draft_params`` the low-HPA-budget deployment of the SAME weights. Both
-    share the architecture config, so the draft KV pages have identical
-    geometry and can ride the target's block table. Greedy decoding emits
-    token streams identical to the non-speculative paged engine; sampled
-    decoding preserves the target distribution exactly via
+    The draft/target pair is TWO TIERS of one :class:`~repro.serving.elastic.
+    ModelBank` — the elastic spectrum's two ends: ``ecfg.spec_target_tier``
+    (default 0, the largest capacity) verifies, ``ecfg.spec_draft_tier``
+    (default -1, the cheapest) drafts. Both tiers share the architecture
+    config, so the draft KV pages have identical geometry and ride the
+    target's block table. The deprecated ``SpeculativeEngine(arch_cfg,
+    params, draft_params, ecfg)`` form still works: the pair is wrapped as a
+    two-tier bank (target first) with a ``DeprecationWarning``. Greedy
+    decoding emits token streams identical to the non-speculative paged
+    engine; sampled decoding preserves the target distribution exactly via
     :func:`rejection_sample`.
     """
 
     _speculative = True
 
-    def __init__(self, arch_cfg, params, draft_params,
-                 ecfg: EngineConfig = EngineConfig()):
+    def __init__(self, model, params=None, draft_params=None,
+                 ecfg: EngineConfig | None = None):
+        if isinstance(model, (ModelBank, DeployedModel)):
+            if draft_params is not None or (
+                params is not None and ecfg is not None
+            ):
+                raise TypeError(
+                    "SpeculativeEngine(bank, ecfg): the draft comes from the "
+                    "bank (ecfg.spec_draft_tier), not a separate argument"
+                )
+            cfg_arg = params if params is not None else ecfg
+            if cfg_arg is not None and not isinstance(cfg_arg, EngineConfig):
+                raise TypeError(
+                    "SpeculativeEngine(bank, ecfg): second argument must be "
+                    f"an EngineConfig, got {type(cfg_arg).__name__}"
+                )
+            bank = model if isinstance(model, ModelBank) \
+                else ModelBank.single(model.cfg, model)
+            ecfg = cfg_arg if cfg_arg is not None else EngineConfig()
+        else:
+            if not hasattr(model, "family") or params is None \
+                    or draft_params is None:
+                raise TypeError(
+                    "SpeculativeEngine expects (bank, ecfg) — or the "
+                    "deprecated (arch_cfg, target_params, draft_params, ecfg)"
+                )
+            warnings.warn(
+                "SpeculativeEngine(arch_cfg, params, draft_params, ecfg) is "
+                "deprecated: build a ModelBank (serving/elastic.py) whose "
+                "tiers carry the target and draft budgets and construct "
+                "SpeculativeEngine(bank, ecfg)",
+                DeprecationWarning, stacklevel=2,
+            )
+            bank = ModelBank(model, [params, draft_params],
+                             names=["target", "draft"])
+            ecfg = ecfg if ecfg is not None else EngineConfig()
         if ecfg.spec_k < 1:
             raise ValueError(
                 f"SpeculativeEngine needs spec_k >= 1, got {ecfg.spec_k}"
+            )
+        if ecfg.tier_policy == "pressure":
+            # every slot is pinned to the target tier (_effective_tier), so
+            # the inherited controller's downshift would be a silent no-op —
+            # fail loudly instead of reporting downshifts that never happen
+            raise EngineCapabilityError(
+                "SpeculativeEngine serves every slot at its target tier; the "
+                "page-pressure tier controller (tier_policy='pressure') "
+                "needs PagedServingEngine. Engine capabilities: "
+                f"{json.dumps(self.capabilities(), sort_keys=True)}"
             )
         greedy = ecfg.greedy or ecfg.temperature <= 0
         if ecfg.spec_draft_mode == "auto":
@@ -232,9 +290,16 @@ class SpeculativeEngine(PagedServingEngine):
                 "the parallel draft schedule needs spec_k >= 2 (a k=1 window "
                 "has no verifiable guess); use spec_draft_mode='sequential'"
             )
-        super().__init__(arch_cfg, params, ecfg)
-        deployed = _as_params(draft_params)
-        self.draft_params = deployed if deployed is not None else draft_params
+        super().__init__(bank, ecfg)
+        try:
+            self._target_tier = bank.resolve(ecfg.spec_target_tier)
+            self._draft_tier = bank.resolve(ecfg.spec_draft_tier)
+        except ValueError as e:
+            raise ValueError(f"spec tier: {e}") from None
+        # every slot serves at the target tier; the bank's cheap end drafts
+        self._default_tier = self._target_tier
+        self.params = self._tier_params[self._target_tier]
+        self.draft_params = self._tier_params[self._draft_tier]
 
         quantized = ecfg.spec_draft_kv_dtype == "int8"
         if not quantized and ecfg.spec_draft_kv_dtype not in _DRAFT_DTYPES:
@@ -242,7 +307,7 @@ class SpeculativeEngine(PagedServingEngine):
                 f"unknown spec_draft_kv_dtype {ecfg.spec_draft_kv_dtype!r}"
             )
         dcache = model_lib.init_paged_cache(
-            arch_cfg, ecfg.max_slots, self.num_blocks, self._bs, self._nb_slot,
+            self.cfg, ecfg.max_slots, self.num_blocks, self._bs, self._nb_slot,
             dtype=jnp.float32 if quantized
             else _DRAFT_DTYPES[ecfg.spec_draft_kv_dtype],
             quantized=quantized,
@@ -278,6 +343,42 @@ class SpeculativeEngine(PagedServingEngine):
         )
         self._prefill2 = jax.jit(self._prefill2_fn, donate_argnums=(6, 7))
         self._chunk2 = jax.jit(self._chunk2_fn, donate_argnums=(6, 7))
+
+    @classmethod
+    def capabilities(cls) -> dict:
+        caps = PagedServingEngine.capabilities.__func__(cls)
+        caps["kv"] = "paged + draft pools"
+        caps["features"].update(
+            speculative=True,
+            # the bank's tiers ARE in play — as the fixed target/draft pair —
+            # but per-REQUEST tier pinning and the pressure controller are
+            # not: every slot verifies at spec_target_tier
+            elastic_tiers=False,
+            tier_pressure_controller=False,
+        )
+        return caps
+
+    def _resolve_tier(self, tier: int | None) -> int:
+        """Every slot serves at the verify target's tier; a request pinned
+        elsewhere would silently verify at the wrong capacity — fail loudly
+        instead (the 'never silently drop a requested feature' convention).
+        Like every engine, submit-time tier errors are RequestRejected."""
+        if tier is None:
+            return self._target_tier
+        try:
+            t = self.bank.resolve(tier)
+        except ValueError as e:
+            raise RequestRejected(str(e)) from None
+        if t == self._target_tier:
+            return t
+        raise EngineCapabilityError(
+            f"SpeculativeEngine serves every slot at its target tier "
+            f"{self._target_tier} (spec_target_tier); per-request tiers need "
+            f"PagedServingEngine. Requested tier: {tier}"
+        )
+
+    def _effective_tier(self, req: Request) -> int:
+        return self._target_tier
 
     # ------------------------------------------------------------- metrics ---
 
@@ -439,7 +540,10 @@ class SpeculativeEngine(PagedServingEngine):
 
     # ------------------------------------------------------------- steps ---
 
-    def _prefill_admitted(self, tokens, lengths, slot_ids, page_map, step):
+    def _prefill_admitted(self, tokens, lengths, slot_ids, page_map, step,
+                          tier: int = 0):
+        # `tier` is the base engine's grouping hook; here it is always the
+        # target tier (the draft prefills alongside in the same program)
         first, self.cache, self._dpools = self._prefill2(
             self.params, self.draft_params, jnp.asarray(tokens),
             jnp.asarray(lengths), jnp.asarray(slot_ids), jnp.asarray(page_map),
@@ -448,7 +552,8 @@ class SpeculativeEngine(PagedServingEngine):
         self.prefill_calls += 1
         return np.asarray(first)
 
-    def _chunk_call(self, tokens, counts, slot_ids, starts, step):
+    def _chunk_call(self, tokens, counts, slot_ids, starts, step,
+                    tier: int = 0):
         first, self.cache, self._dpools = self._chunk2(
             self.params, self.draft_params, jnp.asarray(tokens),
             jnp.asarray(counts), jnp.asarray(slot_ids), jnp.asarray(starts),
