@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-latency bench-prefill bench-spec bench-elastic serve-demo
+.PHONY: test bench-smoke bench bench-latency bench-prefill bench-prefix bench-spec bench-elastic serve-demo
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -19,6 +19,11 @@ bench-latency:
 # prefill on the paged engine (short-request tail ITL is the headline)
 bench-prefill:
 	$(PYTHON) -m benchmarks.serve_latency --mixed --quick
+
+# prefix sharing: radix prompt cache on vs off at equal KV budget
+# (shared-prefix burst TTFT, multi-turn hit rate, eviction-resume reattach)
+bench-prefix:
+	$(PYTHON) -m benchmarks.serve_prefix --quick
 
 # speculative decode: elastic low-budget draft vs the paged engine
 bench-spec:

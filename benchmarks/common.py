@@ -122,6 +122,16 @@ def engine_provenance(engine) -> dict:
             "policy": getattr(e, "tier_policy", "static"),
             "names": [t.name for t in bank],
         }
+    if getattr(engine, "_prefix", None) is not None:
+        out["prefix_cache"] = {
+            "min_hit_pages": e.prefix_min_hit_pages,
+            "lookups": engine.prefix_lookups,
+            "hits": engine.prefix_hits,
+            "hit_tokens": engine.prefix_hit_tokens,
+            "cow_copies": engine.cow_copies,
+            "reattached_pages": engine.reattached_pages,
+            "cached_pages": engine._prefix.pages,
+        }
     if getattr(e, "spec_k", 0):
         out["spec"] = {
             "k": e.spec_k,

@@ -16,6 +16,7 @@ from . import ref
 from .bsr_matmul import BsrMatrix, bsr_from_dense, bsr_matmul_pallas, bsr_to_dense
 from .flash_attention import flash_attention_pallas
 from .lowrank_matmul import lowrank_matmul_pallas
+from .page_copy import page_copy_pallas
 from .paged_attention import paged_attention_kquery_pallas, paged_attention_pallas
 from .soft_threshold import soft_threshold_pallas
 
@@ -29,6 +30,7 @@ __all__ = [
     "flash_attention",
     "paged_attention",
     "paged_attention_kquery",
+    "page_copy",
     "bsr_occupancy",
 ]
 
@@ -81,6 +83,16 @@ def paged_attention_kquery(q, k_pages, v_pages, block_table, lengths,
         q, k_pages, v_pages, block_table, lengths,
         interpret=_auto_interpret() if interpret is None else interpret,
         q_tile=q_tile,
+    )
+
+
+def page_copy(pool, src, dst, interpret: bool | None = None):
+    """Batched whole-page copy ``out[:, dst[i]] = pool[:, src[i]]`` — the
+    device half of copy-on-write prefix sharing. One kernel serves float
+    payload, int8 payload, and f32 scale pools alike."""
+    return page_copy_pallas(
+        pool, src, dst,
+        interpret=_auto_interpret() if interpret is None else interpret,
     )
 
 

@@ -93,6 +93,18 @@ def paged_attention_kquery_ref(
     return out.reshape(b, hq, kq, d).astype(q.dtype)
 
 
+def page_copy_ref(
+    pool: jax.Array,   # (L, num_pages, H, bs, D) — payload or scale pool
+    src: jax.Array,    # (n,) int32 source page ids
+    dst: jax.Array,    # (n,) int32 destination page ids
+) -> jax.Array:
+    """Batched whole-page copy: ``out[:, dst[i]] = pool[:, src[i]]`` with every
+    other page untouched (the copy-on-write primitive of prefix sharing).
+    Duplicate destinations are only ever the (0, 0) identity padding pairs, so
+    scatter order cannot matter."""
+    return pool.at[:, dst].set(pool[:, src])
+
+
 def attention_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True, scale=None
 ) -> jax.Array:

@@ -56,9 +56,14 @@ def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
     spread round-robin over ``tiers``; per-tier token counts ride in the
     stats so the elastic spectrum stays visible in one engine's output."""
     rng = np.random.RandomState(seed)
+    # with the prompt cache on, give the trace something to share: every
+    # request opens with the same two-page "system prompt"
+    shared: list[int] = []
+    if getattr(engine, "_prefix", None) is not None:
+        shared = rng.randint(0, vocab, size=2 * engine.ecfg.block_size).tolist()
     submitted = time.time()          # deadlines are a wall-clock contract
     for i in range(requests):
-        prompt = rng.randint(0, vocab, size=rng.randint(2, 8)).tolist()
+        prompt = shared + rng.randint(0, vocab, size=rng.randint(2, 8)).tolist()
         engine.submit(
             prompt, max_new_tokens=max_new,
             deadline=None if slo_ms is None else submitted + slo_ms / 1e3,
@@ -93,6 +98,15 @@ def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
         )
     if hasattr(engine, "evictions"):
         stats["evictions"] = engine.evictions
+    if getattr(engine, "_prefix", None) is not None:
+        stats["prefix_cache"] = {
+            "lookups": engine.prefix_lookups,
+            "hits": engine.prefix_hits,
+            "hit_tokens": engine.prefix_hit_tokens,
+            "cow_copies": engine.cow_copies,
+            "reattached_pages": engine.reattached_pages,
+            "cached_pages": engine._prefix.pages,
+        }
     if getattr(engine, "tier_controller", None) is not None:
         stats["downshift_ticks"] = engine.downshift_ticks
         stats["tier_switches"] = engine.tier_switches
@@ -133,6 +147,13 @@ def main():
                     help="chunked prefill: process prompts in block-aligned "
                          "chunks of this many tokens interleaved with decode "
                          "ticks (paged engine; None = one-shot prefill)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prompt cache: share KV pages across requests "
+                         "with a common prompt prefix; copy-on-write on first "
+                         "divergent write (paged engine)")
+    ap.add_argument("--prefix-min-hit", type=int, default=1,
+                    help="minimum matched pages before a prefix-cache hit is "
+                         "attached (smaller hits prefill from scratch)")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="TTFT SLO; reports attainment and sets request deadlines")
     ap.add_argument("--kv-dtype", default="float32",
@@ -195,6 +216,8 @@ def main():
         max_slots=args.max_slots, max_len=args.max_len,
         block_size=args.block_size, num_blocks=args.num_blocks,
         kv_dtype=args.kv_dtype, prefill_chunk=args.prefill_chunk,
+        prefix_cache=args.prefix_cache,
+        prefix_min_hit_pages=args.prefix_min_hit,
         tier_policy=args.tier_policy,
         spec_k=spec_k, spec_adaptive=args.spec_adaptive,
     )

@@ -57,6 +57,14 @@ def paged_insert(cache: PagedLayerCache, kh: jax.Array, vh: jax.Array) -> PagedL
     table capacity map to the out-of-range sentinel, so those writes drop;
     per-slot page sets are disjoint by allocator invariant, so the scatter
     has no collisions.
+
+    With prefix caching, a slot's table may reference SHARED pages (allocator
+    refcount > 1) attached read-only from the radix index. The engine
+    maintains the invariant that inserts never land in a shared page: shared
+    pages are always full (attached at page granularity) and the slot's
+    length starts past them, except for the one partially-resumed page that
+    admission copy-on-writes (kernels/page_copy.py) and remaps BEFORE the
+    first insert. This function therefore stays collision-free unchanged.
     """
     n, _, bs, _ = cache.k.shape
     nb = cache.block_table.shape[1]

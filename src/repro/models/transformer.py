@@ -348,6 +348,27 @@ def scatter_prefill_pages(
     return cache._replace(k=k_new, v=v_new, k_scale=k_s, v_scale=v_s)
 
 
+def copy_cache_pages(
+    cache: PagedKVCache,
+    src: jax.Array,   # (n,) int32 source page ids
+    dst: jax.Array,   # (n,) int32 destination page ids
+) -> PagedKVCache:
+    """Copy whole pages ``src[i] -> dst[i]`` across every pool the cache
+    carries — k, v, and (when the pages are int8-quantized) BOTH scale pools;
+    a page copied without its scales would dequantize garbage. The device half
+    of copy-on-write prefix sharing (``serving/prefix_cache.py``): the engine
+    remaps its block table to ``dst`` host-side after this call."""
+    from ..kernels import ops
+
+    k = ops.page_copy(cache.k, src, dst)
+    v = ops.page_copy(cache.v, src, dst)
+    k_s = v_s = None
+    if cache.k_scale is not None:
+        k_s = ops.page_copy(cache.k_scale, src, dst)
+        v_s = ops.page_copy(cache.v_scale, src, dst)
+    return cache._replace(k=k, v=v, k_scale=k_s, v_scale=v_s)
+
+
 def cache_from_prefill(cfg, kvs, max_len: int, dtype=jnp.bfloat16) -> LMCache:
     """Build an LMCache from forward()'s stacked prefill (k, v) heads."""
     kh, vh = kvs  # (L, B, H, T, D)

@@ -33,6 +33,14 @@ a first-class serving dimension:
     requested tiers. Because the paged KV's block table and page pools are
     tier-agnostic, a slot switches tiers mid-stream with no KV copy and no
     recompilation (each tier's program compiles once, on first use).
+
+The same tier-agnosticism extends to the radix prompt cache
+(serving/prefix_cache.py): shared KV pages carry no tier tag, so a prefix
+prefilled while serving at one tier is reattached by admissions pinned to any
+other — exactly the approximation a mid-stream tier switch already makes. The
+controller's pressure signal counts the cache's reclaimable LRU tail as free
+capacity, so a warm prefix cache does not read as scarcity and trigger
+spurious downshifts.
 """
 from __future__ import annotations
 

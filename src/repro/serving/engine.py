@@ -33,6 +33,19 @@ simply stalls and resumes from the last completed chunk once pages free up.
 Greedy output is bitwise-identical to one-shot prefill
 (tests/test_chunked_prefill.py).
 
+Prefix caching (``EngineConfig.prefix_cache``, paged engine only): the
+:class:`BlockAllocator` ref-counts pages and a radix index over token
+prefixes (``serving/prefix_cache.py``) lets requests that share a prompt
+prefix share the PHYSICAL pages holding it — admission attaches matching
+full pages read-only and prefills only the unmatched suffix; the one
+divergent-write case (a fully-cached prompt resuming inside its final hit
+page) is privatized by a batched copy-on-write page copy
+(``kernels/page_copy.py``) before any program runs. Retired and evicted
+slots publish their pages back, so eviction-resume reattaches surviving
+pages, and index-only pages form an LRU tail reclaimed under pressure before
+any live slot is evicted. Streams are bitwise-identical to cache-off
+(tests/test_prefix_cache.py).
+
 Device programs (all shapes static, so serving never recompiles):
   * ``prefill[bucket]`` — batched prompt forward; KV rows (slot-padded) or
     whole prompt blocks (paged) and the first sampled token scatter into
@@ -82,6 +95,7 @@ from ..models import model as model_lib
 from ..models import transformer as transformer_lib
 from .deployed import DeployedModel
 from .elastic import ModelBank, TierController, TierControllerConfig
+from .prefix_cache import PrefixCache
 
 log = logging.getLogger(__name__)
 
@@ -170,6 +184,14 @@ class EngineConfig:
     #                                    decode ticks (None = one-shot prefill;
     #                                    must be a positive multiple of
     #                                    block_size)
+    # prefix cache (paged engine only; serving/prefix_cache.py):
+    prefix_cache: bool = False      # radix prompt index over ref-counted KV
+    #                                 pages: admissions attach matching full
+    #                                 pages read-only and prefill only the
+    #                                 unmatched suffix; retired slots publish
+    #                                 their pages back
+    prefix_min_hit_pages: int = 1   # smallest radix match worth attaching
+    #                                 (shorter hits prefill from scratch)
     # elastic tiers (serving/elastic.py):
     default_tier: int = 0           # bank tier used when submit(tier=None)
     tier_policy: str = "static"     # static | pressure (paged engine only:
@@ -225,6 +247,12 @@ class EngineConfig:
                 f"prefill_chunk={self.prefill_chunk} must be a positive "
                 f"multiple of block_size={self.block_size} (chunks scatter "
                 f"whole pages)"
+            )
+        if not isinstance(self.prefix_min_hit_pages, int) \
+                or self.prefix_min_hit_pages < 1:
+            raise ValueError(
+                f"prefix_min_hit_pages={self.prefix_min_hit_pages!r} must be "
+                "a positive int (a zero-page hit is not a hit)"
             )
         if self.tier_policy not in ("static", "pressure"):
             raise ValueError(
@@ -390,6 +418,7 @@ class ServingEngine:
                 "speculative": False,
                 "elastic_tiers": True,
                 "tier_pressure_controller": False,
+                "prefix_caching": False,
             },
         }
 
@@ -414,6 +443,13 @@ class ServingEngine:
                 f"{type(self).__name__} prefills in one shot "
                 f"(prefill_chunk={ecfg.prefill_chunk} requested); chunked "
                 "prefill needs the paged engine. Engine capabilities: "
+                f"{json.dumps(self.capabilities(), sort_keys=True)}"
+            )
+        if ecfg.prefix_cache and not self._paged:
+            raise EngineCapabilityError(
+                f"{type(self).__name__} has no page pool to share "
+                "(prefix_cache=True requested); the radix prompt cache needs "
+                "the paged engine. Engine capabilities: "
                 f"{json.dumps(self.capabilities(), sort_keys=True)}"
             )
         if ecfg.tier_policy == "pressure" and not self._paged:
@@ -636,9 +672,15 @@ class ServingEngine:
             req.done = True
             req.finished_at = now
             done.append(req)
+            self._retire(slot, req)
             del self._active[slot]
             free.append(slot)
             self._release(slot)
+
+    def _retire(self, slot: int, req: Request):
+        """Hook: the prefix-caching paged engine publishes the slot's full
+        pages into the radix index here (finish AND eviction), before
+        ``_release`` returns whatever it kept to the pool."""
 
     def _release(self, slot: int):
         """Hook: the paged engine returns the slot's pages to the pool."""
@@ -725,19 +767,30 @@ class ServingEngine:
 
 
 class BlockAllocator:
-    """Host-side allocator over a fixed pool of KV pages.
+    """Host-side REF-COUNTED allocator over a fixed pool of KV pages.
 
     Pages are interchangeable — any free page can map any (slot, block)
     position, so there is no external fragmentation by construction; the only
     waste is internal (the partially-filled last block of each sequence).
-    Invariants (asserted in tests): a page is never handed out twice, frees
-    must return owned pages, and free + allocated always equals the pool.
+
+    Prefix sharing (``serving/prefix_cache.py``) lets one physical page back
+    several logical (slot, block) positions plus the radix index, so ownership
+    is a per-page reference count: ``alloc`` grants pages at refcount 1,
+    ``share`` adds a holder, ``release`` drops one and returns the page to the
+    pool when the count hits zero. ``free`` keeps its strict pre-refcount
+    contract — it only accepts EXCLUSIVE pages (refcount exactly 1), so a
+    caller that believes it is the sole owner fails loudly if it is not.
+
+    Invariants (asserted in tests): a page is never handed out twice, every
+    mutation validates its whole argument list BEFORE touching state (a bad
+    call leaves the allocator untouched), and free + distinct-owned always
+    equals the pool whatever the refcounts are.
     """
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, -1, -1))
-        self._owned: set[int] = set()
+        self._refs: dict[int, int] = {}    # page -> holders (absent = free)
 
     @property
     def free_blocks(self) -> int:
@@ -745,33 +798,74 @@ class BlockAllocator:
 
     @property
     def used_blocks(self) -> int:
-        return len(self._owned)
+        """Distinct owned pages (a shared page counts once)."""
+        return len(self._refs)
+
+    def refcount(self, page: int) -> int:
+        """Holders of ``page`` (0 = free)."""
+        return self._refs.get(page, 0)
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
+    def _validate_owned(self, pages: list[int], verb: str):
+        bad = sorted({p for p in pages if p not in self._refs})
+        if bad:
+            raise ValueError(f"{verb} page(s) {bad} that are not allocated")
+        if len(set(pages)) != len(pages):
+            raise ValueError(
+                f"duplicate page(s) in {verb} list {sorted(pages)}"
+            )
+
     def alloc(self, n: int) -> list[int] | None:
-        """n pages, or None if the pool cannot cover them (no partial grants)."""
+        """n pages at refcount 1, or None if the pool cannot cover them (no
+        partial grants)."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._owned.update(pages)
+        for p in pages:
+            self._refs[p] = 1
         return pages
 
+    def share(self, pages: list[int]):
+        """Add one holder to each page — all of them or none of them (the
+        whole list validates before any count moves)."""
+        self._validate_owned(pages, "sharing")
+        for p in pages:
+            self._refs[p] += 1
+
+    def release(self, pages: list[int]) -> list[int]:
+        """Drop one holder from each page; pages reaching zero return to the
+        pool. Validates the whole list first, then returns the pages actually
+        freed (callers use it to account reclaim)."""
+        self._validate_owned(pages, "releasing")
+        freed: list[int] = []
+        for p in pages:
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
     def free(self, pages: list[int]):
-        """Return pages to the pool — all of them or none of them.
+        """Return EXCLUSIVE pages to the pool — all of them or none of them.
 
         The whole list is validated BEFORE any state changes: a bad entry
-        (unowned page, or a duplicate within the list) used to raise mid-loop
-        with the earlier pages already freed, leaving free + used != pool for
-        every caller that caught the error. Now a bad free raises without
-        mutating anything, so the allocator invariant survives."""
-        bad = sorted({p for p in pages if p not in self._owned})
-        if bad:
-            raise ValueError(f"freeing page(s) {bad} that are not allocated")
-        if len(set(pages)) != len(pages):
-            raise ValueError(f"duplicate page(s) in free list {sorted(pages)}")
-        self._owned.difference_update(pages)
+        (unowned page, a duplicate within the list, or a page somebody else
+        still holds a reference to) used to raise mid-loop with the earlier
+        pages already freed, leaving free + used != pool for every caller that
+        caught the error. Now a bad free raises without mutating anything, so
+        the allocator invariant survives."""
+        self._validate_owned(pages, "free")
+        shared = sorted({p for p in pages if self._refs[p] != 1})
+        if shared:
+            raise ValueError(
+                f"freeing shared page(s) {shared} (refcount > 1); drop "
+                "references with release() instead"
+            )
+        for p in pages:
+            del self._refs[p]
         self._free.extend(pages)
 
 
@@ -793,6 +887,13 @@ class PagedServingEngine(ServingEngine):
     keep decoding. Pages are reserved chunk-by-chunk; a chunk that cannot get
     pages stalls its slot at the last completed chunk (no progress lost)
     rather than blocking the tick.
+
+    With ``prefix_cache`` set, admission walks the radix prompt index first
+    and attaches cached prefix pages read-only (see ``_admit``/``_retire``
+    and ``serving/prefix_cache.py``); page ownership then counts references,
+    copy-on-write privatizes the one page a hit admission may write into,
+    and the index's unreferenced LRU tail is the first thing ``_alloc``
+    reclaims under pressure.
     """
 
     _chunked = True
@@ -833,6 +934,20 @@ class PagedServingEngine(ServingEngine):
         self._ptarget: dict[int, int] = {}           # slot -> prefill target len
         self.chunk_calls = 0
         self.chunk_traces = 0
+        # prefix sharing (serving/prefix_cache.py): radix index over prompt
+        # prefixes at page granularity + the CoW copy program
+        self._prefix = PrefixCache(self.allocator, bs) \
+            if ecfg.prefix_cache else None
+        # slot -> device-length reset applied at the next _device_cache push:
+        # a hit admission's length is stale until its first chunk program
+        # runs, and junk rows written meanwhile must not land in pages the
+        # slot attached read-only
+        self._len_reset: dict[int, int] = {}
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0      # prompt tokens served from the index
+        self.cow_copies = 0             # pages privatized by copy-on-write
+        self.reattached_pages = 0       # pages evicted slots got back on resume
         if ecfg.tier_policy == "pressure":
             self.tier_controller = TierController(
                 len(self.bank),
@@ -844,6 +959,13 @@ class PagedServingEngine(ServingEngine):
         self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(5,))
         self._chunk_prog = jax.jit(self._chunk_fn, donate_argnums=(5,))
+        self._copy_prog = jax.jit(
+            transformer_lib.copy_cache_pages, donate_argnums=(0,)
+        )
+        # fixed-shape scatter for _len_reset (OOB pad indices drop)
+        self._len_prog = jax.jit(
+            lambda length, idx, val: length.at[idx].set(val, mode="drop")
+        )
 
     @classmethod
     def capabilities(cls) -> dict:
@@ -854,17 +976,23 @@ class PagedServingEngine(ServingEngine):
             chunked_prefill=True,
             eviction_resume=True,
             tier_pressure_controller=True,
+            prefix_caching=True,
         )
         return caps
 
     def _update_tier_shift(self):
         """Integrate page pressure into the serving-tier downshift (BEFORE
         ``_pre_decode`` can evict anyone — the controller spends capacity
-        quality first, requests last)."""
+        quality first, requests last). Index-only cached pages count as free:
+        they are one ``reclaim`` away from the pool, so a cache-warm engine
+        must not read as a starved one."""
         if self.tier_controller is None:
             return
+        free_like = self.allocator.free_blocks + (
+            self._prefix.reclaimable_pages if self._prefix is not None else 0
+        )
         self._tier_shift = self.tier_controller.update(
-            self.allocator.free_blocks / self.num_blocks
+            free_like / self.num_blocks
         )
         if self._tier_shift > 0:
             self.downshift_ticks += 1
@@ -937,26 +1065,75 @@ class PagedServingEngine(ServingEngine):
         """Admit every queued request that a free slot + free pages can cover
         (earliest deadline first — ``_order_queue``). One-shot mode prefills
         the whole prompt here; chunked mode only reserves the first chunk's
-        pages and hands the slot to ``_prefill_progress``."""
+        pages and hands the slot to ``_prefill_progress``.
+
+        With the prefix cache on, admission first walks the radix index:
+        matching full pages attach READ-ONLY (``allocator.share``) and only
+        the unmatched suffix is prefilled — through the chunk program, the
+        one program that can start at an offset. Later writes never land in
+        an attached page: the suffix starts at ``s0`` and all writes happen
+        at positions >= s0, while attached pages only cover positions < s0 —
+        EXCEPT when a fully-cached prompt resumes at ``plen - 1`` inside its
+        final hit page, which is exactly the copy-on-write case handled
+        below (the page is privatized via one batched device copy before any
+        program runs)."""
         if not self._queue or not free:
             return
         self._order_queue()
         reserve = self.ecfg.decode_reserve or self._bs
-        admitted: list[tuple[int, Request, list[int], int]] = []
+        admitted: list[tuple[int, Request, list[int], int, int]] = []
+        cow_pairs: list[tuple[int, int]] = []
         while self._queue and free:
             req = self._queue[0]
             ptoks = req.prompt + req.out_tokens      # evicted requests resume
-            if self._chunk is not None and len(ptoks) > self._chunk:
-                want = self._chunk                   # first chunk only; the
+            plen = len(ptoks)
+            hit: list[int] = []
+            s0 = 0           # prefill resumes here; tokens < s0 are cached
+            if self._prefix is not None:
+                self.prefix_lookups += 1
+                hit = self._prefix.match(ptoks)
+                if len(hit) < self.ecfg.prefix_min_hit_pages:
+                    hit = []
+                if hit:
+                    # the LAST prompt position is always (re)computed — its
+                    # logits seed the first sampled token — so a fully-cached
+                    # prompt resumes at plen - 1 inside its final hit page
+                    s0 = min(len(hit) * self._bs, plen - 1)
+                    if self._chunk is not None and plen > self._chunk:
+                        # chunk-aligned so the chunked state machine starts
+                        # at the hit boundary (and never rewrites a hit page)
+                        s0 = s0 // self._chunk * self._chunk
+                    hit = hit[: -(-s0 // self._bs)]
+                    if not hit:
+                        s0 = 0
+            if self._chunk is not None and plen - s0 > self._chunk:
+                want = s0 + self._chunk              # first chunk only; the
                 #                                      rest reserves chunk-by-
                 #                                      chunk as prefill advances
             else:
                 remaining = max(req.max_new_tokens - len(req.out_tokens), 1)
-                want = len(ptoks) + min(max(reserve, 1), remaining)
+                want = plen + min(max(reserve, 1), remaining)
             blocks = min(-(-want // self._bs), self._nb_slot)
-            pages = self.allocator.alloc(blocks)
-            if pages is None:
+            cow = bool(hit) and s0 % self._bs != 0   # the suffix's first write
+            #                                          lands inside hit[-1]
+            fresh_n = max(blocks - len(hit), 0) + (1 if cow else 0)
+            if hit:
+                # pin the hit FIRST: _alloc may reclaim index-only pages and
+                # must not cannibalize the chain being attached
+                self.allocator.share(hit)
+            fresh = self._alloc(fresh_n)
+            if fresh is None:
+                if hit:
+                    self.allocator.release(hit)
                 break                                # pool full: stay queued
+            pages = list(hit)
+            if cow:
+                copy = fresh.pop()
+                cow_pairs.append((pages[-1], copy))
+                self.allocator.release([pages[-1]])  # drop the shared ref —
+                pages[-1] = copy                     # the index keeps its own
+                self.cow_copies += 1
+            pages += fresh
             self._queue.pop(0)
             slot = free.pop()
             req.admitted_at = _now()
@@ -965,19 +1142,32 @@ class PagedServingEngine(ServingEngine):
             self._pages[slot] = pages
             self._table[slot, : len(pages)] = pages
             self._table_dirty = True
-            admitted.append((slot, req, pages, len(ptoks)))
+            if hit:
+                self.prefix_hits += 1
+                self.prefix_hit_tokens += s0
+                if req.evictions:
+                    self.reattached_pages += len(hit)
+                # the slot's device length is stale (previous occupant) until
+                # its first chunk program resets it; junk rows written by
+                # other programs this tick must not land in attached pages
+                self._len_reset[slot] = s0
+            admitted.append((slot, req, pages, plen, s0))
         if not admitted:
             return
+        if cow_pairs:
+            self._cow_copy(cow_pairs)
         if self._chunk is not None:
             # chunked mode: no prefill program at admission — mark the slots
-            # mid-prefill; this same tick's _prefill_progress runs chunk 1
-            for slot, req, _, plen in admitted:
-                self._progress[slot] = 0
+            # mid-prefill AT THE HIT BOUNDARY; this same tick's
+            # _prefill_progress runs the first unmatched chunk
+            for slot, req, _, plen, s0 in admitted:
+                self._progress[slot] = s0
                 self._ptarget[slot] = plen
             return
 
         s = self.ecfg.max_slots
-        by_slot = {slot: (req, pages, plen) for slot, req, pages, plen in admitted}
+        by_slot = {slot: (req, pages, plen)
+                   for slot, req, pages, plen, s0 in admitted if s0 == 0}
         for tier, slots in self._tier_groups(by_slot):
             group = [(slot, *by_slot[slot]) for slot in slots]
             bucket = self._bucket(max(plen for _, _, _, plen in group))
@@ -999,6 +1189,61 @@ class PagedServingEngine(ServingEngine):
             for i, (slot, req, _, _) in enumerate(group):
                 req.prefill_emitted += 1
                 self._record(slot, req, int(firsts[i]), free, done)
+        # prefix hits prefill ONLY the unmatched suffix, through the chunk
+        # program (slot-indexed rows starting at s0). The sample key
+        # (step, salt=1, slot) matches the one-shot prefill's exactly, so a
+        # hit admission's stream — greedy or sampled — is identical to what
+        # a cache-off full prefill would have emitted this tick
+        hits = {slot: (req, plen, s0)
+                for slot, req, _, plen, s0 in admitted if s0 > 0}
+        for tier, slots in self._tier_groups(hits):
+            width = self._bucket(max(hits[x][1] - hits[x][2] for x in slots))
+            tokens = np.zeros((s, width), np.int32)
+            counts = np.zeros((s,), np.int32)
+            slot_ids = np.full((s,), s, np.int32)
+            starts = np.zeros((s,), np.int32)
+            for slot in slots:
+                req, plen, s0 = hits[slot]
+                ptoks = req.prompt + req.out_tokens
+                tokens[slot, : plen - s0] = ptoks[s0:]
+                counts[slot] = plen - s0
+                slot_ids[slot] = slot
+                starts[slot] = s0
+            firsts = self._chunk_call(tokens, counts, slot_ids, starts, step,
+                                      tier)
+            for slot in slots:
+                req = hits[slot][0]
+                req.prefill_emitted += 1
+                self._record(slot, req, int(firsts[slot]), free, done)
+
+    def _alloc(self, n: int) -> list[int] | None:
+        """Pool allocation with the prefix cache as the reclaim tail: when
+        the free list cannot cover ``n``, index-only cached pages are
+        reclaimed LRU-first — BEFORE any caller resorts to evicting live
+        slots."""
+        pages = self.allocator.alloc(n)
+        if pages is None and self._prefix is not None:
+            self._prefix.reclaim(n - self.allocator.free_blocks)
+            pages = self.allocator.alloc(n)
+        return pages
+
+    def _cow_copy(self, pairs: list[tuple[int, int]]):
+        """ONE batched device page copy for this tick's CoW pairs (the block
+        table was already remapped host-side). Pairs pad to a power of two
+        with (0, 0) identity entries, so the program compiles O(log) shapes."""
+        n = 1
+        while n < len(pairs):
+            n *= 2
+        pad = pairs + [(0, 0)] * (n - len(pairs))
+        src = jnp.asarray([p for p, _ in pad], jnp.int32)
+        dst = jnp.asarray([q for _, q in pad], jnp.int32)
+        self._apply_cow(src, dst)
+
+    def _apply_cow(self, src: jax.Array, dst: jax.Array):
+        """Hook: the speculative engine also copies its draft pools here —
+        they ride the target's block table and page ids, so the same pairs
+        remap both caches."""
+        self.cache = self._copy_prog(self.cache, src, dst)
 
     def _prefill_admitted(self, tokens, lengths, slot_ids, page_map, step,
                           tier: int = 0):
@@ -1052,7 +1297,7 @@ class PagedServingEngine(ServingEngine):
                     want = p + c
                 need = min(-(-want // self._bs), self._nb_slot)
                 while len(self._pages[slot]) < need:
-                    page = self.allocator.alloc(1)
+                    page = self._alloc(1)
                     if page is None:
                         break
                     idx = len(self._pages[slot])
@@ -1131,7 +1376,7 @@ class PagedServingEngine(ServingEngine):
             write_pos = len(req.prompt) + len(req.out_tokens) - 1 + (window - 1)
             need = min(write_pos // self._bs + 1, self._nb_slot)
             while slot in self._active and len(self._pages[slot]) < need:
-                page = self.allocator.alloc(1)
+                page = self._alloc(1)
                 if page is not None:
                     idx = len(self._pages[slot])
                     self._pages[slot].append(page[0])
@@ -1169,16 +1414,41 @@ class PagedServingEngine(ServingEngine):
         req = self._active.pop(slot)
         req.evictions += 1
         self.evictions += 1
+        self._retire(slot, req)
         self._release(slot)
         self._queue.append(req)
         free.append(slot)
 
+    def _retire(self, slot: int, req: Request):
+        """Publish the slot's FULL pages into the radix index — the KV that
+        was actually written: a decode-phase slot has everything but the last
+        sampled token's position, an evicted mid-prefill slot its chunk
+        progress. The published pages' references TRANSFER to the index
+        (``_release`` then only frees the exclusive tail), so finish and
+        eviction both leave the prefix warm; eviction-resume reattaches these
+        pages instead of chunked re-prefill."""
+        if self._prefix is None:
+            return
+        pages = self._pages.get(slot)
+        if not pages:
+            return
+        ptoks = req.prompt + req.out_tokens
+        written = self._progress.get(slot, len(ptoks) - 1)
+        n_full = min(written // self._bs, len(pages))
+        if n_full <= 0:
+            return
+        self._prefix.publish(ptoks, pages[:n_full])
+        del pages[:n_full]
+
     def _release(self, slot: int):
         pages = self._pages.pop(slot, None)
         if pages:
-            self.allocator.free(pages)
+            # release, not free: attached pages fall back to their remaining
+            # holders (the radix index), exclusive pages return to the pool
+            self.allocator.release(pages)
         self._table[slot, :] = self.num_blocks
         self._table_dirty = True
+        self._len_reset.pop(slot, None)
         self._progress.pop(slot, None)
         self._ptarget.pop(slot, None)
 
@@ -1186,6 +1456,21 @@ class PagedServingEngine(ServingEngine):
         if self._table_dirty:
             self.cache = self.cache._replace(block_table=jnp.asarray(self._table))
             self._table_dirty = False
+        if self._len_reset:
+            # pending hit-admission length resets (see _admit): applied before
+            # any length-addressed program can write a junk row via a stale
+            # length into a page the slot only shares. Padded to a fixed
+            # (max_slots,) shape with out-of-range indices (dropped by the
+            # scatter) so the jitted program compiles exactly once
+            s = self.ecfg.max_slots
+            idx = np.full((s,), s, np.int32)
+            val = np.zeros((s,), np.int32)
+            for i, (slot, s0) in enumerate(self._len_reset.items()):
+                idx[i], val[i] = slot, s0
+            self.cache = self.cache._replace(
+                length=self._len_prog(self.cache.length, idx, val)
+            )
+            self._len_reset.clear()
         return self.cache
 
 
@@ -1221,6 +1506,8 @@ class ReferenceEngine:
             missing.append(
                 f"tier_policy={ecfg.tier_policy!r} (page-pressure controller)"
             )
+        if ecfg.prefix_cache:
+            missing.append("prefix_cache=True (radix prompt cache)")
         if missing:
             raise _capability_error(type(self), arch_cfg.family, missing)
         log.info(
@@ -1261,6 +1548,7 @@ class ReferenceEngine:
                 "speculative": False,
                 "elastic_tiers": True,
                 "tier_pressure_controller": False,
+                "prefix_caching": False,
             },
         }
 

@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops
 from ..models import model as model_lib
 from ..models import transformer as transformer_lib
 from .deployed import DeployedModel
@@ -89,6 +90,20 @@ _DRAFT_DTYPES = {
 }
 
 _SLOT_EMA = 0.8   # per-slot acceptance smoothing (feeds the k controller)
+
+
+def _copy_draft_pools(pools, src, dst):
+    """Copy-on-write for the draft page pools: draft KV rides the target's
+    block table AND page ids, so the same (src, dst) pairs that privatized a
+    shared target page must privatize its draft twin — payload and, when the
+    draft pool is int8, both scale pools."""
+    k, v, k_s, v_s = pools
+    k = ops.page_copy(k, src, dst)
+    v = ops.page_copy(v, src, dst)
+    if k_s is not None:
+        k_s = ops.page_copy(k_s, src, dst)
+        v_s = ops.page_copy(v_s, src, dst)
+    return (k, v, k_s, v_s)
 
 
 # ------------------------------------------------------- rejection sampling ---
@@ -343,6 +358,7 @@ class SpeculativeEngine(PagedServingEngine):
         )
         self._prefill2 = jax.jit(self._prefill2_fn, donate_argnums=(6, 7))
         self._chunk2 = jax.jit(self._chunk2_fn, donate_argnums=(6, 7))
+        self._dcopy = jax.jit(_copy_draft_pools, donate_argnums=(0,))
 
     @classmethod
     def capabilities(cls) -> dict:
@@ -566,6 +582,10 @@ class SpeculativeEngine(PagedServingEngine):
         super()._release(slot)
         self._guess[slot, :] = 0        # fresh/resumed slots restart guessing
         self._accept_ema[slot] = np.nan  # ... and restart their rate estimate
+
+    def _apply_cow(self, src, dst):
+        super()._apply_cow(src, dst)
+        self._dpools = self._dcopy(self._dpools, src, dst)
 
     def _decode_tick(self, active, free, done):
         """ONE speculative tick's device portion: the jitted draft + k-wide

@@ -138,3 +138,47 @@ class TestFlashAttentionKernel:
         a = ops.flash_attention(q, k, v, bq=256, bk=256, **I)
         b = ops.flash_attention(q, k, v, bq=64, bk=128, **I)
         np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
+class TestPageCopyKernel:
+    """Batched KV page copy (copy-on-write device half of prefix sharing)."""
+
+    @pytest.mark.parametrize(
+        "l,p,h,bs,d,dtype",
+        [
+            (2, 8, 2, 16, 32, jnp.float32),    # fp payload pool
+            (2, 8, 2, 16, 32, jnp.int8),       # int8 payload pool
+            (2, 8, 2, 16, 1, jnp.float32),     # int8 scale pool shape
+        ],
+    )
+    def test_copies_match_ref(self, l, p, h, bs, d, dtype):
+        pool = rnd(0, (l, p, h, bs, d), jnp.float32)
+        if dtype == jnp.int8:
+            pool = (pool * 10).astype(jnp.int8)
+        src = jnp.array([0, 3, 5], jnp.int32)
+        dst = jnp.array([1, 6, 7], jnp.int32)
+        got = ops.page_copy(pool.astype(dtype), src, dst, **I)
+        want = ref.page_copy_ref(pool.astype(dtype), src, dst)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_untouched_pages_preserved(self):
+        pool = rnd(1, (1, 8, 2, 16, 32), jnp.float32)
+        got = ops.page_copy(pool, jnp.array([2], jnp.int32),
+                            jnp.array([5], jnp.int32), **I)
+        keep = [i for i in range(8) if i != 5]
+        np.testing.assert_array_equal(
+            np.asarray(got[:, keep]), np.asarray(pool[:, keep])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got[:, 5]), np.asarray(pool[:, 2])
+        )
+
+    def test_identity_padding_is_noop(self):
+        """The engine pads CoW batches to a power of two with (0, 0) pairs;
+        src == dst entries must leave the pool bitwise unchanged."""
+        pool = rnd(2, (2, 8, 2, 16, 32), jnp.float32)
+        src = jnp.array([3, 0, 0, 0], jnp.int32)
+        dst = jnp.array([4, 0, 0, 0], jnp.int32)
+        got = ops.page_copy(pool, src, dst, **I)
+        want = ref.page_copy_ref(pool, jnp.array([3]), jnp.array([4]))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
