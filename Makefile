@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-latency bench-prefill bench-prefix bench-spec bench-elastic serve-demo
+.PHONY: test bench-smoke bench bench-latency bench-prefill bench-prefix bench-spec bench-elastic bench-fused serve-demo
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -33,6 +33,11 @@ bench-spec:
 # admitted rate under page pressure with the tier controller on vs off
 bench-elastic:
 	$(PYTHON) -m benchmarks.serve_elastic --quick
+
+# fused SLR kernel: one-pass low-rank+sparse vs separate calls — engine
+# tok/s, jitted decode-step latency, per-kernel HBM bytes + roofline
+bench-fused:
+	$(PYTHON) -m benchmarks.kernel_bench --quick
 
 # full scaled-down paper benchmark suite
 bench:

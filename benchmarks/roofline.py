@@ -3,6 +3,11 @@
 Reads the per-cell compiled-artifact records and prints EXPERIMENTS.md's
 §Roofline table: the three terms, the dominant bottleneck, useful-FLOPs
 ratio, and per-device memory fit.
+
+A second, MEASURED section reads BENCH_fused.json (``make bench-fused``):
+per-serving-kernel HBM bytes and achieved vs roofline FLOP/s for the
+separate-call SLR path vs the fused one-pass kernel at decode/prefill
+shapes.
 """
 from __future__ import annotations
 
@@ -11,6 +16,7 @@ import json
 import os
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+BENCH_FUSED = os.path.join(os.path.dirname(__file__), "..", "BENCH_fused.json")
 HBM_LIMIT = 16e9  # v5e
 
 
@@ -33,10 +39,40 @@ def fmt_row(r: dict) -> str:
     )
 
 
+def serving_kernels_section(path: str = BENCH_FUSED) -> None:
+    """Measured serving-kernel roofline from the fused-SLR benchmark."""
+    if not os.path.exists(path):
+        print("roofline/serving-kernels/no-data,0.0,run make bench-fused first")
+        return
+    with open(path) as f:
+        bench = json.load(f)
+    backend = bench.get("backend", "?")
+    print(f"\nserving kernels (measured on backend={backend}, "
+          f"roofline at nominal v5e)")
+    print(f"{'kernel':<22} {'HBM bytes':>10} {'meas us':>8} "
+          f"{'achieved F/s':>12} {'roofline F/s':>12} {'of roof':>8}")
+    for kr in bench.get("kernels", []):
+        for p in ("separate", "fused"):
+            ach = kr["achieved_flops_per_s"][p]
+            roof = kr["roofline_flops_per_s_at_v5e"][p]
+            name = f"slr/{kr['phase']}/{p}"
+            print(
+                f"{name:<22} {kr['hbm_bytes'][p]:>10} "
+                f"{kr['measured_us'][p]:>8} {ach:>12.3g} {roof:>12.3g} "
+                f"{ach / max(roof, 1):>7.1%}"
+            )
+            print(
+                f"roofline/serving/{kr['phase']}/{p},{kr['measured_us'][p]},"
+                f"hbm_bytes={kr['hbm_bytes'][p]};achieved={ach:.3g};"
+                f"roofline={roof:.3g}"
+            )
+
+
 def main():
     recs = load_records()
     if not recs:
         print("roofline/no-data,0.0,run scripts_sweep.sh first")
+        serving_kernels_section()
         return
     header = (
         f"{'arch':<18} {'shape':<12} {'mesh':<9} "
@@ -54,6 +90,7 @@ def main():
             f"collective={r['collective_s']:.4f};dominant={r['dominant']};"
             f"useful={r['useful_flops_ratio']:.3f}"
         )
+    serving_kernels_section()
 
 
 if __name__ == "__main__":

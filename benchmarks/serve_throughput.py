@@ -94,7 +94,8 @@ def main(steps: int = 30, out: str = "BENCH_serve.json", **kw):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--fmt", default="factored", choices=("dense", "factored", "bsr"))
+    ap.add_argument("--fmt", default="factored",
+                    choices=("dense", "factored", "bsr", "fused"))
     ap.add_argument("--out", default="BENCH_serve.json")
     a = ap.parse_args()
     main(steps=10 if a.quick else 30, out=a.out, fmt=a.fmt,

@@ -34,28 +34,47 @@ __all__ = ["BsrMatrix", "bsr_from_dense", "bsr_to_dense", "bsr_matmul_pallas"]
 
 
 class BsrMatrix:
-    """Static-shape block-CSC container (named Bsr for familiarity)."""
+    """Static-shape block-CSC container (named Bsr for familiarity).
 
-    def __init__(self, counts, rows, vals, shape, block_size):
+    ``shape`` is the ORIGINAL dense (n, m); dims that do not divide
+    ``block_size`` are zero-padded at conversion time, so the block tables
+    cover ``ceil(n/bs) x ceil(m/bs)`` tiles and matmul callers slice the
+    padded output columns back off. ``empty`` is STATIC deploy-time metadata
+    (no live blocks at all) so jitted callers can skip the sparse phase
+    entirely instead of burning one DMA+matmul per column block on the
+    MAXB >= 1 padding slot.
+    """
+
+    def __init__(self, counts, rows, vals, shape, block_size, empty=False):
         self.counts = counts          # (JB,) int32
         self.rows = rows              # (JB, MAXB) int32
         self.vals = vals              # (JB, MAXB, bs, bs)
-        self.shape = shape            # dense (n, m)
+        self.shape = shape            # original dense (n, m), pre-padding
         self.block_size = block_size
+        self.empty = empty            # static: no live blocks anywhere
 
     def tree_flatten(self):
-        return (self.counts, self.rows, self.vals), (self.shape, self.block_size)
+        return (self.counts, self.rows, self.vals), (
+            self.shape, self.block_size, self.empty
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
 
     @property
-    def occupancy(self) -> float:
-        """Fraction of dense tiles actually stored."""
-        n, m = self.shape
+    def padded_shape(self) -> tuple[int, int]:
+        """Block-aligned dims the tables actually cover."""
         bs = self.block_size
-        total = (n // bs) * (m // bs)
+        n, m = self.shape
+        return (-(-n // bs) * bs, -(-m // bs) * bs)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of (padded) dense tiles actually stored."""
+        n_pad, m_pad = self.padded_shape
+        bs = self.block_size
+        total = (n_pad // bs) * (m_pad // bs)
         return float(np.sum(np.asarray(self.counts))) / max(total, 1)
 
 
@@ -64,17 +83,29 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def bsr_from_dense(s: np.ndarray, block_size: int = 128) -> BsrMatrix:
-    """Eager (deploy-time) conversion of a dense sparse matrix to block-CSC."""
+def bsr_from_dense(s: np.ndarray, block_size: int = 128, maxb: int | None = None) -> BsrMatrix:
+    """Eager (deploy-time) conversion of a dense sparse matrix to block-CSC.
+
+    Dims that do not divide ``block_size`` are zero-padded to the next block
+    boundary (the padding tiles are all-zero, so they are never stored) —
+    odd hidden sizes deploy as ``bsr``/``fused`` instead of asserting.
+    ``maxb`` forces the per-column slot count (>= the live maximum) so
+    several matrices can share one stacked table layout.
+    """
     s = np.asarray(s)
     n, m = s.shape
     bs = block_size
-    assert n % bs == 0 and m % bs == 0, f"{s.shape} not divisible by {bs}"
-    ib, jb = n // bs, m // bs
+    if n % bs or m % bs:
+        s = np.pad(s, ((0, -n % bs), (0, -m % bs)))
+    ib, jb = s.shape[0] // bs, s.shape[1] // bs
     tiles = s.reshape(ib, bs, jb, bs).transpose(0, 2, 1, 3)  # (ib, jb, bs, bs)
     live = np.abs(tiles).max(axis=(2, 3)) > 0                # (ib, jb)
     counts = live.sum(axis=0).astype(np.int32)               # per column block
-    maxb = max(int(counts.max()) if counts.size else 0, 1)
+    live_max = int(counts.max()) if counts.size else 0
+    if maxb is None:
+        maxb = max(live_max, 1)
+    elif maxb < max(live_max, 1):
+        raise ValueError(f"maxb={maxb} < live maximum {live_max}")
     rows = np.zeros((jb, maxb), np.int32)
     vals = np.zeros((jb, maxb, bs, bs), s.dtype)
     for j in range(jb):
@@ -82,20 +113,22 @@ def bsr_from_dense(s: np.ndarray, block_size: int = 128) -> BsrMatrix:
         rows[j, : len(live_rows)] = live_rows
         vals[j, : len(live_rows)] = tiles[live_rows, j]
     return BsrMatrix(
-        jnp.asarray(counts), jnp.asarray(rows), jnp.asarray(vals), (n, m), bs
+        jnp.asarray(counts), jnp.asarray(rows), jnp.asarray(vals), (n, m), bs,
+        empty=live_max == 0,
     )
 
 
 def bsr_to_dense(bsr: BsrMatrix) -> jax.Array:
     n, m = bsr.shape
+    n_pad, _ = bsr.padded_shape
     bs = bsr.block_size
     jb, maxb = bsr.rows.shape
-    dense = jnp.zeros((n // bs, jb, bs, bs), bsr.vals.dtype)
+    dense = jnp.zeros((n_pad // bs, jb, bs, bs), bsr.vals.dtype)
     slot = jnp.arange(maxb)[None, :] < bsr.counts[:, None]  # (jb, maxb)
     vals = jnp.where(slot[:, :, None, None], bsr.vals, 0)
     for t in range(maxb):
         dense = dense.at[bsr.rows[:, t], jnp.arange(jb)].add(vals[:, t])
-    return dense.transpose(0, 2, 1, 3).reshape(n, m)
+    return dense.transpose(0, 2, 1, 3).reshape(n_pad, jb * bs)[:n, :m]
 
 
 def _kernel(scalars_ref, x_ref, vals_ref, y_ref, acc_ref, *, maxb: int):
@@ -129,10 +162,13 @@ def bsr_matmul_pallas(
     t_dim, n = x.shape
     n_s, m = bsr.shape
     assert n == n_s, (x.shape, bsr.shape)
+    n_pad, m_pad = bsr.padded_shape
     bs = bsr.block_size
     jb, maxb = bsr.rows.shape
     bt = min(bt, t_dim)
-    x = jnp.pad(x, ((0, -t_dim % bt), (0, 0))) if t_dim % bt else x
+    pad_t, pad_n = -t_dim % bt, n_pad - n
+    if pad_t or pad_n:
+        x = jnp.pad(x, ((0, pad_t), (0, pad_n)))
     t_pad = x.shape[0]
 
     # scalar prefetch buffer: counts then flattened rows
@@ -160,10 +196,10 @@ def bsr_matmul_pallas(
     y = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((t_pad, m), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((t_pad, m_pad), x.dtype),
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")
         ),
     )(scalars, x, bsr.vals)
-    return y[:t_dim]
+    return y[:t_dim, :m]

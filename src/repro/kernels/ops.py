@@ -11,6 +11,7 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from . import ref
 from .bsr_matmul import BsrMatrix, bsr_from_dense, bsr_matmul_pallas, bsr_to_dense
@@ -18,15 +19,25 @@ from .flash_attention import flash_attention_pallas
 from .lowrank_matmul import lowrank_matmul_pallas
 from .page_copy import page_copy_pallas
 from .paged_attention import paged_attention_kquery_pallas, paged_attention_pallas
+from .slr_matmul import (
+    BsrStack,
+    slr_matmul_pallas,
+    slr_matmul_stacked_pallas,
+    stack_bsr,
+)
 from .soft_threshold import soft_threshold_pallas
 
 __all__ = [
     "BsrMatrix",
+    "BsrStack",
     "bsr_from_dense",
     "bsr_to_dense",
+    "stack_bsr",
     "soft_threshold",
     "lowrank_matmul",
     "bsr_matmul",
+    "slr_matmul",
+    "slr_matmul_stacked",
     "flash_attention",
     "paged_attention",
     "paged_attention_kquery",
@@ -53,9 +64,67 @@ def lowrank_matmul(x, p, vt, interpret: bool | None = None, **kw):
 
 
 def bsr_matmul(x, bsr: BsrMatrix, interpret: bool | None = None, **kw):
+    # Empty-S fast path: `empty` is static deploy-time metadata, so jitted
+    # callers skip the kernel (MAXB is padded to >= 1 even for an all-zero
+    # matrix — one dead DMA+matmul per column block per call otherwise).
+    if getattr(bsr, "empty", False):
+        return jnp.zeros((x.shape[0], bsr.shape[1]), x.dtype)
     return bsr_matmul_pallas(
         x, bsr, interpret=_auto_interpret() if interpret is None else interpret, **kw
     )
+
+
+def slr_matmul(x, p, vt, bsr: BsrMatrix | None, interpret: bool | None = None, **kw):
+    """Fused y = x @ P @ Vt + x @ S in one Pallas pass over x row-tiles.
+
+    Degenerate corners dispatch to the cheaper single-phase kernels: empty S
+    (static ``bsr.empty``) skips the sparse epilogue via ``lowrank_matmul``,
+    r == 0 / missing factors skip the low-rank phases via ``bsr_matmul``.
+    """
+    interp = _auto_interpret() if interpret is None else interpret
+    r = 0 if p is None else p.shape[-1]
+    empty_s = bsr is None or getattr(bsr, "empty", False)
+    if empty_s and r == 0:
+        m = vt.shape[-1] if vt is not None else bsr.shape[1]
+        return jnp.zeros((x.shape[0], m), x.dtype)
+    if empty_s:
+        from .slr_matmul import row_tile
+
+        bm = row_tile(x.shape[0], x.dtype, cap=kw.pop("bt", 128))
+        return lowrank_matmul_pallas(x, p, vt, bm=bm, interpret=interp)
+    if r == 0:
+        return bsr_matmul(x, bsr, interpret=interp, **kw)
+    return slr_matmul_pallas(x, p, vt, bsr, interpret=interp, **kw)
+
+
+def slr_matmul_stacked(x, p, vt, stack: BsrStack | None, layer,
+                       interpret: bool | None = None, **kw):
+    """Layer-scannable fused SLR matmul: per-layer tables selected inside the
+    kernel's DMA index maps via the scalar-prefetched ``layer`` id.
+
+    Same degenerate-corner dispatch as ``slr_matmul``; the r == 0 /
+    non-empty-S corner (rare: a site that kept sparse support but no live
+    rank) rides the fused kernel with dummy rank-1 zero factors rather than
+    growing a third stacked kernel.
+    """
+    interp = _auto_interpret() if interpret is None else interpret
+    r = 0 if p is None else p.shape[-1]
+    empty_s = stack is None or getattr(stack, "empty", False)
+    if empty_s and r == 0:
+        m = vt.shape[-1] if vt is not None else stack.shape[1]
+        return jnp.zeros((x.shape[0], m), x.dtype)
+    if empty_s:
+        from .slr_matmul import row_tile
+
+        p_l = jax.lax.dynamic_index_in_dim(p, layer, keepdims=False)
+        vt_l = jax.lax.dynamic_index_in_dim(vt, layer, keepdims=False)
+        bm = row_tile(x.shape[0], x.dtype, cap=kw.pop("bt", 128))
+        return lowrank_matmul_pallas(x, p_l, vt_l, bm=bm, interpret=interp)
+    if r == 0:
+        num_l = stack.counts.shape[0]
+        p = jnp.zeros((num_l, x.shape[1], 1), x.dtype)
+        vt = jnp.zeros((num_l, 1, stack.shape[1]), x.dtype)
+    return slr_matmul_stacked_pallas(x, p, vt, stack, layer, interpret=interp, **kw)
 
 
 def flash_attention(q, k, v, causal=True, interpret: bool | None = None, **kw):

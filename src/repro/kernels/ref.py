@@ -23,6 +23,39 @@ def bsr_matmul_ref(x: jax.Array, bsr) -> jax.Array:
     return (x.astype(jnp.float32) @ dense.astype(jnp.float32)).astype(x.dtype)
 
 
+def slr_matmul_ref(x: jax.Array, p, vt, bsr=None) -> jax.Array:
+    """y = x @ P @ Vt + x @ S, matching the fused kernel's numerics: both
+    contributions accumulate in one f32 accumulator and cast to x.dtype once
+    (NOT lowrank_ref + bsr_ref, which would round each partial separately)."""
+    from .bsr_matmul import bsr_to_dense
+
+    xf = x.astype(jnp.float32)
+    acc = jnp.zeros((x.shape[0], vt.shape[-1] if vt is not None else bsr.shape[1]),
+                    jnp.float32)
+    if p is not None and p.shape[-1] > 0:
+        acc = acc + xf @ p.astype(jnp.float32) @ vt.astype(jnp.float32)
+    if bsr is not None and not getattr(bsr, "empty", False):
+        acc = acc + xf @ bsr_to_dense(bsr).astype(jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def slr_matmul_stacked_ref(x: jax.Array, p, vt, stack, layer) -> jax.Array:
+    """Per-layer oracle for the stacked kernel: dynamic-slice layer ``layer``
+    out of every table and defer to ``slr_matmul_ref``."""
+    idx = lambda a: jax.lax.dynamic_index_in_dim(a, layer, keepdims=False)
+    bsr = None
+    if stack is not None and not getattr(stack, "empty", False):
+        from .bsr_matmul import BsrMatrix
+
+        bsr = BsrMatrix(
+            idx(stack.counts), idx(stack.rows), idx(stack.vals),
+            stack.shape, stack.block_size, empty=stack.empty,
+        )
+    return slr_matmul_ref(
+        x, None if p is None else idx(p), None if vt is None else idx(vt), bsr
+    )
+
+
 def paged_attention_ref(
     q: jax.Array,            # (B, Hq, D) single decode query per slot
     k_pages: jax.Array,      # (num_pages, Hkv, bs, D) page pool

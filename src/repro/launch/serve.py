@@ -132,7 +132,12 @@ def main():
         help="comma-separated HPA budgets materialized as ONE ModelBank's "
              "tiers, largest first, e.g. 1.0,0.6,0.3 (omit: serve dense init)",
     )
-    ap.add_argument("--fmt", default="factored", choices=("dense", "factored", "bsr"))
+    ap.add_argument(
+        "--fmt", "--format", dest="fmt", default="factored",
+        choices=("dense", "factored", "bsr", "fused"),
+        help="deployment format (docs/serving.md#deployment-formats): 'fused' "
+             "runs one Pallas pass per linear site with layer-stacked tables",
+    )
     ap.add_argument("--engine", default="paged", choices=tuple(ENGINES))
     ap.add_argument("--kappa", type=float, default=0.7)
     ap.add_argument("--requests", type=int, default=4)

@@ -18,9 +18,12 @@ def apply_weight(x: jax.Array, w) -> jax.Array:
     """y = x @ w for a dense array OR any deployed-format weight object.
 
     Every matmul against a model weight goes through here so serving can swap
-    dense matrices for structured ones (``serving.slr_params.SLRLinear`` in
-    factored / block-CSR form) without touching model code. Objects expose
-    ``apply(x)``; plain arrays take the ordinary einsum path.
+    dense matrices for structured ones without touching model code:
+    ``serving.slr_params.SLRLinear`` (factored / block-CSR / fused one-pass
+    Pallas) and its per-layer ``SLRLayerView`` (stacked fused weights inside
+    an index-driven layer scan) all expose ``apply(x)``; plain arrays take
+    the ordinary einsum path. Fused weights pick decode-width row tiles from
+    the flattened activation, so small-batch decode never pads to 128.
     """
     if hasattr(w, "apply"):
         return w.apply(x)

@@ -88,6 +88,36 @@ def init_lm(cfg, key) -> dict:
     return params
 
 
+def _is_layer_view(x) -> bool:
+    """Duck-typed: a leaf that must not be sliced as scan xs (e.g. a stacked
+    fused ``SLRLinear`` whose BSR tables are selected per layer inside the
+    Pallas kernel's DMA index maps, ``serving/slr_params.py``)."""
+    return getattr(x, "scan_by_index", False)
+
+
+def layer_view(layers, l):
+    """Per-layer view of a scan-stacked layer tree for index-driven scans.
+
+    Ordinary stacked arrays are dynamic-sliced at layer ``l`` (exactly what
+    ``lax.scan`` xs would do); ``scan_by_index`` leaves return ``at_layer(l)``
+    views that keep their stacked tables whole — slicing those as xs would
+    copy an entire sparse table out of HBM every layer of every tick.
+    """
+    def index_leaf(leaf):
+        if _is_layer_view(leaf):
+            return leaf.at_layer(l)
+        return jax.lax.dynamic_index_in_dim(leaf, l, 0, keepdims=False)
+
+    return jax.tree_util.tree_map(index_leaf, layers, is_leaf=_is_layer_view)
+
+
+def _scan_by_index(layers) -> bool:
+    return any(
+        _is_layer_view(leaf)
+        for leaf in jax.tree_util.tree_leaves(layers, is_leaf=_is_layer_view)
+    )
+
+
 def _layer_apply(lp, x, cfg, positions, cache: KVCache | None):
     """One transformer layer. Returns (x, aux_loss, new_kv)."""
     h = apply_norm(x, lp.get("pre_attn"), cfg.norm_type)
@@ -144,16 +174,24 @@ def forward(
 
     aux_total = jnp.zeros((), jnp.float32)
 
-    if isinstance(params["layers"], (list, tuple)):
+    layers = params["layers"]
+    unrolled = isinstance(layers, (list, tuple))
+    # fused format: stacked sparse tables must not ride as scan xs — scan
+    # layer indices instead and build per-layer views inside the body
+    by_index = not unrolled and _scan_by_index(layers)
+    layer_xs = jnp.arange(cfg.num_layers) if by_index else layers
+    get_lp = (lambda xs: layer_view(layers, xs)) if by_index else (lambda xs: xs)
+
+    if unrolled:
         # unrolled serving mode: per-layer param dicts (deployed formats whose
         # weights cannot stack under scan, e.g. block-CSR SLR matrices).
         x, aux_total, new_cache = _forward_unrolled(
-            params["layers"], x, cfg, positions, cache, collect_kv
+            layers, x, cfg, positions, cache, collect_kv
         )
     elif cache is None:
         def body(carry, lp):
             x, aux = carry
-            fn = lambda lp_, x_: _layer_apply(lp_, x_, cfg, positions, None)
+            fn = lambda lp_, x_: _layer_apply(get_lp(lp_), x_, cfg, positions, None)
             if cfg.remat:
                 fn = jax.checkpoint(fn)
             x, a, kv = fn(lp, x)
@@ -161,7 +199,7 @@ def forward(
             # but scan ys defeat DCE through remat -> ~70 GB/device at 4k)
             return (x, aux + a), (kv if collect_kv else None)
 
-        (x, aux_total), kvs = jax.lax.scan(body, (x, aux_total), params["layers"], unroll=cfg.scan_unroll)
+        (x, aux_total), kvs = jax.lax.scan(body, (x, aux_total), layer_xs, unroll=cfg.scan_unroll)
         new_cache = kvs  # (kh (L,B,H,T,D), vh (L,B,H,T,D))
     elif isinstance(cache, PagedKVCache):
         # paged decode: carry the page pools (layer-sliced like the contiguous
@@ -178,7 +216,7 @@ def forward(
                 jax.lax.dynamic_index_in_dim(k_s, l_idx, 0, keepdims=False) if quant else None,
                 jax.lax.dynamic_index_in_dim(v_s, l_idx, 0, keepdims=False) if quant else None,
             )
-            x, a, kv = _layer_apply(lp, x, cfg, positions, layer_cache)
+            x, a, kv = _layer_apply(get_lp(lp), x, cfg, positions, layer_cache)
             k_p = jax.lax.dynamic_update_index_in_dim(k_p, kv.k, l_idx, 0)
             v_p = jax.lax.dynamic_update_index_in_dim(v_p, kv.v, l_idx, 0)
             if quant:
@@ -189,7 +227,7 @@ def forward(
         (x, aux_total, k_new, v_new, ks_new, vs_new), _ = jax.lax.scan(
             body,
             (x, aux_total, cache.k, cache.v, cache.k_scale, cache.v_scale),
-            (params["layers"], jnp.arange(cfg.num_layers)),
+            (layer_xs, jnp.arange(cfg.num_layers)),
             unroll=cfg.scan_unroll,
         )
         new_cache = PagedKVCache(
@@ -206,7 +244,7 @@ def forward(
             k_l = jax.lax.dynamic_index_in_dim(k_full, l_idx, 0, keepdims=False)
             v_l = jax.lax.dynamic_index_in_dim(v_full, l_idx, 0, keepdims=False)
             layer_cache = KVCache(k_l, v_l, cache.length)
-            x, a, kv = _layer_apply(lp, x, cfg, positions, layer_cache)
+            x, a, kv = _layer_apply(get_lp(lp), x, cfg, positions, layer_cache)
             k_full = jax.lax.dynamic_update_index_in_dim(k_full, kv.k, l_idx, 0)
             v_full = jax.lax.dynamic_update_index_in_dim(v_full, kv.v, l_idx, 0)
             return (x, aux + a, k_full, v_full), None
@@ -214,7 +252,7 @@ def forward(
         (x, aux_total, k_new, v_new), _ = jax.lax.scan(
             body,
             (x, aux_total, cache.k, cache.v),
-            (params["layers"], jnp.arange(cfg.num_layers)),
+            (layer_xs, jnp.arange(cfg.num_layers)),
             unroll=cfg.scan_unroll,
         )
         new_cache = LMCache(k_new, v_new, cache.length + t)

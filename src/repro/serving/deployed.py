@@ -16,6 +16,14 @@ site. Three formats, increasing TPU specialization:
                    per-matrix kernels cannot ride a scan, so the layer stack
                    is *unrolled* into per-layer param dicts
                    (``models.transformer._forward_unrolled``)
+  * ``fused``    — ONE fused Pallas pass per linear site
+                   (``kernels/slr_matmul.py``: x @ P @ Vt + x @ S into a
+                   shared accumulator, x read once / y written once) with
+                   layer-STACKED block-CSC tables. The layer stack stays
+                   scan-stacked: the forward scans layer *indices* and the
+                   kernel selects the layer in its scalar-prefetched DMA
+                   index maps (``SLRLinear.scan_by_index``), so trace and
+                   compile time stay depth-independent
 
 Only matmul-applied sites are structured: attention q/k/v/o, MLP gate/up/down
 and (if selected) the LM head. Embedding tables are gather sites and MoE
@@ -34,7 +42,7 @@ from ..core import sparse
 from ..core.admm import SLRState, surrogate_params
 from ..core.selection import BlockInfo, path_str
 from ..models import model as model_lib
-from .slr_params import SLRLinear, build_slr_linears, coo_to_bsr
+from .slr_params import SLRLinear, build_slr_linears, coo_to_bsr, coo_to_bsr_stack
 
 __all__ = ["DeployedModel", "is_linear_site"]
 
@@ -59,11 +67,29 @@ def _coo_slice_to_bsr(lin: SLRLinear, bsr_block: int) -> SLRLinear:
     if lin.s_coo is None:
         return lin
     s_bsr = coo_to_bsr(lin.s_coo, bsr_block)
-    if s_bsr is None:
-        return lin  # ragged shape: stay on the COO/XLA path
     return SLRLinear(
         p=lin.p, vt=lin.vt, s_coo=None, s_bsr=s_bsr, shape=lin.shape,
         use_kernel=True,
+    )
+
+
+def _fuse_linear(lin: SLRLinear, bsr_block: int) -> SLRLinear:
+    """One SLRLinear → fused format: stacked slices keep the layer axis as a
+    ``BsrStack`` (scan-by-index), unstacked ones get a per-matrix block-CSC.
+    Empty-S sites (s_coo already dropped at build) carry no sparse table at
+    all — ``ops.slr_matmul`` statically skips the sparse epilogue."""
+    if lin.ndim == 3:
+        s_stack = (
+            coo_to_bsr_stack(lin.s_coo, bsr_block) if lin.s_coo is not None else None
+        )
+        return SLRLinear(
+            p=lin.p, vt=lin.vt, s_coo=None, s_bsr=None, s_stack=s_stack,
+            shape=lin.shape, use_kernel=True, fuse=True,
+        )
+    s_bsr = coo_to_bsr(lin.s_coo, bsr_block) if lin.s_coo is not None else None
+    return SLRLinear(
+        p=lin.p, vt=lin.vt, s_coo=None, s_bsr=s_bsr, shape=lin.shape,
+        use_kernel=True, fuse=True,
     )
 
 
@@ -94,7 +120,7 @@ class DeployedModel:
         """Deploy (params, SLR state) at format ``fmt``."""
         if fmt == "dense":
             return cls(cfg, surrogate_params(params, state, blocks), fmt)
-        if fmt not in ("factored", "bsr"):
+        if fmt not in ("factored", "bsr", "fused"):
             raise ValueError(f"unknown deployment format {fmt!r}")
 
         by_name = {info.name: info for info in blocks}
@@ -119,6 +145,14 @@ class DeployedModel:
             serving = jax.tree_util.tree_map(
                 lambda x: _coo_slice_to_bsr(x, bsr_block)
                 if isinstance(x, SLRLinear) and x.ndim == 2 else x,
+                serving,
+                is_leaf=lambda x: isinstance(x, SLRLinear),
+            )
+        elif fmt == "fused":
+            # layer stack STAYS stacked — stacked sites become scan-by-index
+            # fused weights, unstacked ones per-matrix fused weights
+            serving = jax.tree_util.tree_map(
+                lambda x: _fuse_linear(x, bsr_block) if isinstance(x, SLRLinear) else x,
                 serving,
                 is_leaf=lambda x: isinstance(x, SLRLinear),
             )

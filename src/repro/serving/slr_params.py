@@ -1,5 +1,5 @@
 """Deployment-time SLR parameters: the paper's point is that L + S is what
-ships. Three deployment formats, increasing TPU-specialization:
+ships. Four deployment formats, increasing TPU-specialization:
 
   * ``dense``    — materialize X_hat = L + S (baseline; no memory savings,
                    used for perplexity parity checks)
@@ -7,6 +7,10 @@ ships. Three deployment formats, increasing TPU-specialization:
                    via dense scatter per call (XLA path, shards under GSPMD)
   * ``bsr``      — factored L + 128x128 block-CSR S for the Pallas kernels
                    (single-core TPU hot path; DESIGN.md §3 hardware adaptation)
+  * ``fused``    — ONE Pallas pass per linear site (x @ P @ Vt + x @ S in a
+                   shared accumulator, ``kernels/slr_matmul.py``) with
+                   layer-STACKED block-CSC tables, so the transformer layer
+                   stack stays ``lax.scan``-able (no per-layer unrolling)
 
 ``deployment_report`` accounts bytes for each format — the numbers behind
 EXPERIMENTS.md's memory-reduction table (paper Table 1 PRM columns).
@@ -24,6 +28,7 @@ from ..core import sparse
 from ..core.admm import SLRState, surrogate_params
 from ..core.selection import BlockInfo
 from ..kernels.bsr_matmul import BsrMatrix, bsr_from_dense
+from ..kernels.slr_matmul import BsrStack, stack_bsr
 
 
 @dataclass
@@ -37,20 +42,33 @@ class SLRLinear:
     is static metadata choosing the Pallas hot path at trace time.
     """
 
-    p: jax.Array | None          # (n, r_live)
-    vt: jax.Array | None         # (r_live, m)
+    p: jax.Array | None          # (n, r_live) — or (L, n, r_live) stacked
+    vt: jax.Array | None         # (r_live, m) — or (L, r_live, m) stacked
     s_coo: sparse.CooMatrix | None
     s_bsr: BsrMatrix | None
     shape: tuple[int, int]
     use_kernel: bool = False     # static: route apply() through Pallas kernels
+    s_stack: BsrStack | None = None  # layer-stacked block-CSC (fused format)
+    fuse: bool = False           # static: one fused Pallas pass per apply
 
     def apply(self, x: jax.Array, kernel: bool | None = None) -> jax.Array:
         """y = x @ (L + S)."""
         if kernel is None:
             kernel = self.use_kernel
-        if self.p is None and self.s_coo is None and self.s_bsr is None:
+        if (self.p is None and self.s_coo is None and self.s_bsr is None
+                and self.s_stack is None):
             # fully-truncated block (extreme HPA budgets): y = x @ 0
             return jnp.zeros((*x.shape[:-1], self.shape[1]), x.dtype)
+        if self.fuse and kernel:
+            assert self.s_stack is None, (
+                "stacked fused weights are applied per layer: the forward "
+                "scans layer indices and calls at_layer(l) (scan_by_index)"
+            )
+            from ..kernels.ops import slr_matmul
+
+            flat = x.reshape(-1, x.shape[-1])
+            y = slr_matmul(flat, self.p, self.vt, self.s_bsr)
+            return y.reshape(*x.shape[:-1], self.shape[1])
         y = 0.0
         if self.p is not None:
             if kernel:
@@ -71,8 +89,24 @@ class SLRLinear:
         return y
 
     @property
+    def scan_by_index(self) -> bool:
+        """Stacked fused weight: the layer scan must NOT slice this leaf as
+        scan xs (that would copy the whole BSR table out of HBM every layer
+        of every tick) — it scans ``jnp.arange(L)`` instead and takes
+        :meth:`at_layer` views, which select the layer inside the kernel's
+        scalar-prefetched DMA index maps."""
+        return self.fuse and self.s_stack is not None
+
+    def at_layer(self, layer) -> "SLRLayerView":
+        """View of layer ``layer`` of a stacked fused weight (traced index)."""
+        assert self.scan_by_index
+        return SLRLayerView(self, layer)
+
+    @property
     def dtype(self):
-        for part in (self.p, self.s_coo and self.s_coo.values, self.s_bsr and self.s_bsr.vals):
+        for part in (self.p, self.s_coo and self.s_coo.values,
+                     self.s_bsr and self.s_bsr.vals,
+                     self.s_stack and self.s_stack.vals):
             if part is not None:
                 return part.dtype
         return jnp.float32
@@ -84,6 +118,8 @@ class SLRLinear:
             return self.p.ndim
         if self.s_coo is not None:
             return self.s_coo.values.ndim + 1
+        if self.s_stack is not None:
+            return 3  # stacked by construction
         return 2  # only s_bsr left, and block-CSR is per-matrix by construction
 
     @property
@@ -92,7 +128,10 @@ class SLRLinear:
         if self.p is not None:
             total += self.p.size * self.p.dtype.itemsize
             total += self.vt.size * self.vt.dtype.itemsize
-        if self.s_bsr is not None:
+        if self.s_stack is not None:
+            total += self.s_stack.vals.size * self.s_stack.vals.dtype.itemsize
+            total += self.s_stack.rows.size * 4 + self.s_stack.counts.size * 4
+        elif self.s_bsr is not None:
             total += self.s_bsr.vals.size * self.s_bsr.vals.dtype.itemsize
             total += self.s_bsr.rows.size * 4 + self.s_bsr.counts.size * 4
         elif self.s_coo is not None:
@@ -101,28 +140,70 @@ class SLRLinear:
         return total
 
 
-# `shape`/`use_kernel` are static metadata; everything else traces through jit.
+# `shape`/`use_kernel`/`fuse` are static metadata; everything else traces.
 jax.tree_util.register_dataclass(
     SLRLinear,
-    data_fields=["p", "vt", "s_coo", "s_bsr"],
-    meta_fields=["shape", "use_kernel"],
+    data_fields=["p", "vt", "s_coo", "s_bsr", "s_stack"],
+    meta_fields=["shape", "use_kernel", "fuse"],
 )
 
 
-def coo_to_bsr(s_coo: sparse.CooMatrix, bsr_block: int) -> BsrMatrix | None:
-    """Dense-ify an unstacked COO matrix and re-tile as block-CSR.
-
-    The block size halves until it divides both dims (floor 8); returns None
-    for ragged shapes no block size fits — callers stay on the COO/XLA path.
+class SLRLayerView:
+    """Layer ``l`` of a stacked fused :class:`SLRLinear` — deliberately NOT a
+    pytree. It is built *inside* the layer-scan body
+    (``models.transformer.layer_view``) with a traced layer index, and
+    ``models.layers.apply_weight`` duck-dispatches on its ``apply``. The
+    stacked tables stay captured whole; only the layer id varies per step.
     """
-    dense_s = np.asarray(sparse.to_dense(s_coo), np.float32)
-    n, m = dense_s.shape
+
+    __slots__ = ("lin", "layer")
+
+    def __init__(self, lin: SLRLinear, layer):
+        self.lin = lin
+        self.layer = layer
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        from ..kernels.ops import slr_matmul_stacked
+
+        lin = self.lin
+        flat = x.reshape(-1, x.shape[-1])
+        y = slr_matmul_stacked(flat, lin.p, lin.vt, lin.s_stack, self.layer)
+        return y.reshape(*x.shape[:-1], lin.shape[1])
+
+    @property
+    def dtype(self):
+        return self.lin.dtype
+
+
+def _fit_block(n: int, m: int, bsr_block: int) -> int:
+    """Halve the block size while it divides neither dim (floor 8) — keeps
+    tile granularity useful on small matrices. A size that still doesn't
+    divide is fine: ``bsr_from_dense`` zero-pads trailing partial blocks."""
     bs = bsr_block
     while (n % bs or m % bs) and bs > 8:
         bs //= 2
-    if n % bs or m % bs:
-        return None
-    return bsr_from_dense(dense_s, bs)
+    return bs
+
+
+def coo_to_bsr(s_coo: sparse.CooMatrix, bsr_block: int) -> BsrMatrix:
+    """Dense-ify an unstacked COO matrix and re-tile as block-CSC.
+
+    Ragged shapes zero-pad the trailing partial blocks (the padding tiles
+    are all-zero so they are never stored) — every shape converts.
+    """
+    dense_s = np.asarray(sparse.to_dense(s_coo), np.float32)
+    n, m = dense_s.shape
+    return bsr_from_dense(dense_s, _fit_block(n, m, bsr_block))
+
+
+def coo_to_bsr_stack(s_coo: sparse.CooMatrix, bsr_block: int) -> BsrStack:
+    """Dense-ify a layer-STACKED COO matrix and re-tile every layer as
+    block-CSC with one shared (block size, MAXB) layout — the table shapes
+    the stacked fused kernel scans over."""
+    dense_s = np.asarray(sparse.to_dense(s_coo), np.float32)
+    num_l, n, m = dense_s.shape
+    bs = _fit_block(n, m, bsr_block)
+    return stack_bsr([bsr_from_dense(dense_s[l], bs) for l in range(num_l)])
 
 
 def _live_rank_slice(blk, info: BlockInfo):

@@ -1,0 +1,316 @@
+"""Fused SLR kernel (PR 7 tentpole) — one Pallas pass for low-rank + sparse.
+
+Three layers of coverage, all in interpret mode so CPU CI exercises the
+kernel bodies:
+
+  1. kernel parity: fused vs the jnp oracle AND vs the separate
+     lowrank+bsr calls it replaces, across dtypes, ranks (incl. r=0),
+     occupancies (incl. empty S), decode/prefill row widths, ragged shapes,
+     and the stacked layer axis (incl. under ``lax.scan``);
+  2. fast paths: the empty-S skip never launches a kernel, and decode-width
+     row tiles don't pad small batches to 128;
+  3. the ``fused`` deployment format: scan-stacked (never unrolled), forward
+     parity with ``factored``, and greedy token streams bitwise-identical to
+     ``factored`` across paged decode, chunked prefill, int8 KV pages,
+     speculative decoding, and elastic tiers (the acceptance criteria).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core.admm import SalaadConfig, admm_update, init_slr_state
+from repro.core.selection import SelectionConfig
+from repro.kernels import ops, ref
+from repro.kernels.bsr_matmul import bsr_from_dense
+from repro.kernels.slr_matmul import row_tile, stack_bsr
+from repro.models import model as model_lib
+from repro.serving.deployed import DeployedModel
+from repro.serving.elastic import ModelBank
+from repro.serving.engine import EngineConfig, PagedServingEngine
+from repro.serving.slr_params import SLRLinear
+from repro.serving.speculative import SpeculativeEngine
+
+I = dict(interpret=True)
+TOL = {jnp.float32: dict(atol=2e-3, rtol=2e-3), jnp.bfloat16: dict(atol=1e-1, rtol=1e-1)}
+
+
+def rnd(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+def make_sparse(key, n, m, occupancy, bs, dtype=jnp.float32):
+    """Block-sparse dense matrix with ~``occupancy`` live tiles (padded dims
+    allowed: the trailing partial blocks are part of the live tiles)."""
+    ib, jb = -(-n // bs), -(-m // bs)
+    mask = jax.random.uniform(jax.random.PRNGKey(key + 77), (ib, jb)) < occupancy
+    full = rnd(key, (ib * bs, jb * bs), dtype) * jnp.repeat(
+        jnp.repeat(mask, bs, 0), bs, 1
+    ).astype(dtype)
+    return np.asarray(full[:n, :m], np.float32)
+
+
+def assert_close(got, want, dtype):
+    got32, want32 = np.asarray(got, np.float32), np.asarray(want, np.float32)
+    scale = max(float(np.abs(want32).max()), 1.0)
+    np.testing.assert_allclose(got32 / scale, want32 / scale, **TOL[dtype])
+
+
+# ------------------------------------------------------------ kernel parity ---
+
+
+class TestFusedKernelParity:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("t", [4, 128])          # decode / prefill widths
+    @pytest.mark.parametrize("r", [0, 8])
+    @pytest.mark.parametrize("occupancy", [0.0, 0.4, 1.0])
+    def test_matrix(self, dtype, t, r, occupancy):
+        k, m, bs = 96, 160, 32
+        x = rnd(0, (t, k), dtype)
+        p, vt = rnd(1, (k, r), dtype), rnd(2, (r, m), dtype)
+        s = make_sparse(3, k, m, occupancy, bs)
+        bsr = bsr_from_dense(s.astype(np.asarray(x).dtype), bs)
+        got = ops.slr_matmul(x, p, vt, bsr, **I)
+        assert got.shape == (t, m) and got.dtype == x.dtype
+        assert_close(got, ref.slr_matmul_ref(x, p, vt, bsr), dtype)
+
+    @pytest.mark.parametrize("t", [4, 128])
+    def test_matches_separate_calls(self, t):
+        """The fused pass replaces lowrank_matmul + bsr_matmul + XLA add."""
+        k, m, r, bs = 128, 128, 16, 32
+        x, p, vt = rnd(0, (t, k)), rnd(1, (k, r)), rnd(2, (r, m))
+        bsr = bsr_from_dense(make_sparse(3, k, m, 0.5, bs), bs)
+        fused = ops.slr_matmul(x, p, vt, bsr, **I)
+        separate = ops.lowrank_matmul(x, p, vt, **I) + ops.bsr_matmul(x, bsr, **I)
+        assert_close(fused, separate, jnp.float32)
+
+    def test_ragged_shape_pads(self):
+        """Satellite: odd hidden sizes deploy — trailing partial blocks are
+        zero-padded, outputs sliced back (masked parity vs plain matmul)."""
+        t, k, m, r, bs = 5, 72, 100, 4, 32
+        x, p, vt = rnd(0, (t, k)), rnd(1, (k, r)), rnd(2, (r, m))
+        s = make_sparse(3, k, m, 0.3, bs)
+        bsr = bsr_from_dense(s, bs)
+        assert bsr.shape == (k, m) and bsr.padded_shape == (96, 128)
+        got = ops.slr_matmul(x, p, vt, bsr, **I)
+        want = np.asarray(x) @ (np.asarray(p) @ np.asarray(vt) + s)
+        assert_close(got, want, jnp.float32)
+
+    def test_fully_truncated(self):
+        """r = 0 AND empty S: y = x @ 0 without any kernel launch."""
+        x = rnd(0, (8, 64))
+        bsr = bsr_from_dense(np.zeros((64, 32), np.float32), 32)
+        got = ops.slr_matmul(x, jnp.zeros((64, 0)), jnp.zeros((0, 32)), bsr, **I)
+        np.testing.assert_array_equal(got, jnp.zeros((8, 32)))
+        got = ops.slr_matmul(x, None, None, bsr, **I)
+        np.testing.assert_array_equal(got, jnp.zeros((8, 32)))
+
+
+class TestStackedKernel:
+    def _stacked(self, num_l=3, k=64, m=128, r=8, bs=32):
+        p, vt = rnd(1, (num_l, k, r)), rnd(2, (num_l, r, m))
+        # per-layer occupancies including one all-empty layer inside a
+        # non-empty stack — its counts row is all zero, the epilogue only
+        # pays the per-column low-rank emit
+        mats = [
+            bsr_from_dense(make_sparse(10 + l, k, m, occ, bs), bs)
+            for l, occ in enumerate((0.4, 0.0, 0.9))
+        ]
+        return p, vt, stack_bsr(mats)
+
+    def test_layers_match_per_matrix_oracle(self):
+        p, vt, stack = self._stacked()
+        x = rnd(0, (8, 64))
+        for l in range(stack.num_layers):
+            got = ops.slr_matmul_stacked(x, p, vt, stack, jnp.int32(l), **I)
+            want = ref.slr_matmul_stacked_ref(x, p, vt, stack, jnp.int32(l))
+            assert_close(got, want, jnp.float32)
+
+    def test_scannable_over_layers(self):
+        """The whole point of the layer axis: the stack rides lax.scan."""
+        p, vt, stack = self._stacked()
+        x = rnd(0, (4, 64))
+
+        def body(carry, l):
+            return carry, ops.slr_matmul_stacked(carry, p, vt, stack, l, **I)
+
+        _, ys = jax.lax.scan(body, x, jnp.arange(stack.num_layers))
+        for l in range(stack.num_layers):
+            assert_close(
+                ys[l], ref.slr_matmul_stacked_ref(x, p, vt, stack, jnp.int32(l)),
+                jnp.float32,
+            )
+
+    def test_stack_pads_to_common_maxb(self):
+        _, _, stack = self._stacked()
+        assert stack.rows.shape[0] == 3
+        # layer 2 at 0.9 occupancy dictates MAXB; layer 1 is all padding
+        assert int(np.max(np.asarray(stack.counts)[1])) == 0
+        assert stack.rows.shape[2] == int(np.max(np.asarray(stack.counts)))
+
+    def test_empty_stack_dispatches_lowrank(self):
+        num_l, k, m, r = 2, 64, 64, 4
+        p, vt = rnd(1, (num_l, k, r)), rnd(2, (num_l, r, m))
+        mats = [bsr_from_dense(np.zeros((k, m), np.float32), 32)] * num_l
+        stack = stack_bsr(mats)
+        assert stack.empty
+        got = ops.slr_matmul_stacked(rnd(0, (4, k)), p, vt, stack, jnp.int32(1), **I)
+        want = ref.lowrank_matmul_ref(rnd(0, (4, k)), p[1], vt[1])
+        assert_close(got, want, jnp.float32)
+
+
+# ---------------------------------------------------------------- fast paths ---
+
+
+class TestFastPaths:
+    def test_empty_s_skips_bsr_kernel(self, monkeypatch):
+        """ops.bsr_matmul must not launch a kernel for a statically-empty S."""
+        import repro.kernels.ops as ops_mod
+
+        monkeypatch.setattr(
+            ops_mod, "bsr_matmul_pallas",
+            lambda *a, **k: pytest.fail("kernel launched for empty S"),
+        )
+        bsr = bsr_from_dense(np.zeros((64, 32), np.float32), 32)
+        assert bsr.empty
+        out = ops.bsr_matmul(rnd(0, (8, 64)), bsr)
+        np.testing.assert_array_equal(out, jnp.zeros((8, 32)))
+
+    def test_empty_s_skips_fused_sparse_epilogue(self, monkeypatch):
+        """The fused wrapper drops to the low-rank-only kernel for empty S."""
+        import repro.kernels.ops as ops_mod
+
+        monkeypatch.setattr(
+            ops_mod, "slr_matmul_pallas",
+            lambda *a, **k: pytest.fail("fused kernel launched for empty S"),
+        )
+        x, p, vt = rnd(0, (8, 64)), rnd(1, (64, 4)), rnd(2, (4, 32))
+        bsr = bsr_from_dense(np.zeros((64, 32), np.float32), 32)
+        got = ops.slr_matmul(x, p, vt, bsr, **I)
+        assert_close(got, ref.lowrank_matmul_ref(x, p, vt), jnp.float32)
+
+    def test_decode_width_row_tiles(self):
+        assert row_tile(4, jnp.float32) == 8      # not 128
+        assert row_tile(4, jnp.bfloat16) == 16
+        assert row_tile(100, jnp.float32) == 104
+        assert row_tile(300, jnp.float32) == 128  # capped for prefill
+
+
+# ------------------------------------------------------------- fused format ---
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_arch("olmo_1b").reduced()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = SalaadConfig(
+        selection=SelectionConfig(min_dim=16), rho_constant=5.0, exact_svd=True
+    )
+    state, blocks = init_slr_state(params, scfg)
+    for step in range(4):
+        state, _ = admm_update(params, state, blocks, scfg, step)
+    return cfg, params, state, blocks
+
+
+@pytest.fixture(scope="module")
+def banks(trained):
+    cfg, params, state, blocks = trained
+    return {
+        fmt: ModelBank.build(cfg, params, state, blocks, budgets=(1.0, 0.6),
+                             fmt=fmt, bsr_block=32)
+        for fmt in ("factored", "fused")
+    }
+
+
+PROMPTS = [[5, 7, 11, 13, 17], [23, 29, 31, 37, 41, 43, 47, 53, 59], [61, 67, 71]]
+
+
+def run_tokens(engine, prompts, max_new=5, tiers=None):
+    for i, p in enumerate(prompts):
+        engine.submit(p, max_new_tokens=max_new,
+                      tier=None if tiers is None else tiers[i])
+    return {r.uid: r.out_tokens for r in engine.run()}
+
+
+class TestFusedFormat:
+    def test_layers_stay_scan_stacked(self, trained):
+        """Unlike 'bsr', 'fused' never unrolls the layer stack — the stacked
+        tables scan by index through the kernel's scalar-prefetch maps."""
+        cfg, params, state, blocks = trained
+        dm = DeployedModel.build(cfg, params, state, blocks, fmt="fused",
+                                 bsr_block=32)
+        assert not isinstance(dm.params["layers"], (list, tuple))
+        is_slr = lambda x: isinstance(x, SLRLinear)  # noqa: E731
+        stacked = [
+            leaf for leaf in jax.tree_util.tree_leaves(
+                dm.params["layers"], is_leaf=is_slr)
+            if isinstance(leaf, SLRLinear)
+        ]
+        assert stacked and any(l.scan_by_index for l in stacked)
+        assert all(l.fuse for l in stacked)
+
+    def test_forward_parity_vs_factored(self, trained):
+        cfg, params, state, blocks = trained
+        dm_fa = DeployedModel.build(cfg, params, state, blocks, fmt="factored")
+        dm_fu = DeployedModel.build(cfg, params, state, blocks, fmt="fused",
+                                    bsr_block=32)
+        toks = jnp.asarray([[3, 1, 4, 1, 5, 9, 2, 6], [5, 3, 5, 8, 9, 7, 9, 3]],
+                           jnp.int32)
+        lf, lu = dm_fa.forward(toks), dm_fu.forward(toks)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lu),
+                                   atol=2e-3, rtol=2e-3)
+        assert bool((lf.argmax(-1) == lu.argmax(-1)).all())
+
+    def test_param_bytes_accounts_stacked_tables(self, trained):
+        cfg, params, state, blocks = trained
+        dm = DeployedModel.build(cfg, params, state, blocks, fmt="fused",
+                                 bsr_block=32)
+        acct = dm.param_bytes()
+        assert acct["format"] == "fused" and acct["structured_bytes"] > 0
+
+
+class TestFusedEngineStreams:
+    """Acceptance: fused greedy streams bitwise-identical to factored."""
+
+    def _compare(self, banks, engine_cls, ecfg_kw, max_new=5, tiers=None):
+        streams = {}
+        for fmt in ("factored", "fused"):
+            eng = engine_cls(banks[fmt], EngineConfig(**ecfg_kw))
+            streams[fmt] = run_tokens(eng, PROMPTS, max_new=max_new, tiers=tiers)
+        assert streams["fused"] == streams["factored"], streams
+        return streams["fused"]
+
+    def test_paged_decode(self, banks):
+        out = self._compare(
+            banks, PagedServingEngine,
+            dict(max_slots=3, max_len=32, block_size=8),
+        )
+        assert all(len(t) == 5 for t in out.values())
+
+    def test_chunked_prefill(self, banks):
+        self._compare(
+            banks, PagedServingEngine,
+            dict(max_slots=3, max_len=64, block_size=8, prefill_chunk=8),
+        )
+
+    def test_int8_kv_pages(self, banks):
+        self._compare(
+            banks, PagedServingEngine,
+            dict(max_slots=3, max_len=32, block_size=8, kv_dtype="int8"),
+        )
+
+    def test_speculative(self, banks):
+        self._compare(
+            banks, SpeculativeEngine,
+            dict(max_slots=2, max_len=32, block_size=8, spec_k=3),
+        )
+
+    def test_elastic_tiers(self, banks):
+        """Per-request tiers: tier-1 slots ride the 0.6-budget fused weights
+        and still match factored token-for-token."""
+        self._compare(
+            banks, PagedServingEngine,
+            dict(max_slots=3, max_len=32, block_size=8),
+            tiers=[0, 1, 1],
+        )

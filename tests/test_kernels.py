@@ -85,6 +85,29 @@ class TestBsrMatmulKernel:
         want = ref.bsr_matmul_ref(x, bsr)
         np.testing.assert_allclose(got, want, atol=1e-1, rtol=1e-1)
 
+    def test_padded_partial_blocks(self):
+        """Shapes not divisible by block_size zero-pad the trailing blocks
+        (this used to be a bare assert) — masked parity vs the dense matmul."""
+        bs = 32
+        n, m = 72, 100  # neither divides 32
+        rng = np.random.RandomState(1)
+        dense = (rng.randn(n, m) * (rng.rand(n, m) < 0.15)).astype(np.float32)
+        bsr = bsr_from_dense(dense, bs)
+        assert bsr.shape == (n, m) and bsr.padded_shape == (96, 128)
+        np.testing.assert_allclose(bsr_to_dense(bsr), dense, atol=1e-6)
+        x = rnd(2, (17, n), jnp.float32)
+        got = ops.bsr_matmul(x, bsr, **I)
+        assert got.shape == (17, m)
+        np.testing.assert_allclose(got, np.asarray(x) @ dense, atol=2e-3, rtol=2e-3)
+
+    def test_empty_matrix_fast_path(self):
+        """All-zero S: static ``empty`` flag set, matmul returns exact zeros
+        without burning the MAXB >= 1 padding slot."""
+        bsr = bsr_from_dense(np.zeros((64, 64), np.float32), 32)
+        assert bsr.empty and bsr.occupancy == 0.0
+        x = rnd(0, (8, 64), jnp.float32)
+        np.testing.assert_array_equal(ops.bsr_matmul(x, bsr, **I), np.zeros((8, 64)))
+
     def test_ragged_rows(self):
         """Non-uniform blocks per column exercise the scalar-prefetch path."""
         bs = 32
