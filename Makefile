@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-latency bench-prefill bench-prefix bench-spec bench-elastic bench-fused serve-demo
+.PHONY: test bench-smoke bench bench-latency bench-prefill bench-prefix bench-spec bench-elastic bench-fused bench-obs serve-demo
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -38,6 +38,13 @@ bench-elastic:
 # tok/s, jitted decode-step latency, per-kernel HBM bytes + roofline
 bench-fused:
 	$(PYTHON) -m benchmarks.kernel_bench --quick
+
+# telemetry overhead: metrics + tracing on vs off on one engine — streams
+# must be bitwise identical, tok/s overhead target < 2% (BENCH_obs.json).
+# Runs the FULL 60m model (not --quick): the overhead must be weighed
+# against realistic per-tick device work for the percentage to mean much
+bench-obs:
+	$(PYTHON) -m benchmarks.serve_obs
 
 # full scaled-down paper benchmark suite
 bench:

@@ -101,43 +101,12 @@ def emit(name: str, us_per_call: float, derived: str):
 
 
 def engine_provenance(engine) -> dict:
-    """Engine-config provenance recorded inside every BENCH_*.json payload so
-    the numbers stay interpretable when flags/defaults change."""
-    e = engine.ecfg
-    out = {
-        "engine": type(engine).__name__,
-        "max_slots": e.max_slots,
-        "max_len": e.max_len,
-        "block_size": e.block_size,
-        "num_blocks": getattr(engine, "num_blocks", None),
-        "kv_dtype": e.kv_dtype,
-        "evict_policy": e.evict_policy,
-        "prefill_chunk": getattr(e, "prefill_chunk", None),
-        "greedy": e.greedy,
-    }
-    bank = getattr(engine, "bank", None)
-    if bank is not None and len(bank) > 1:
-        out["tiers"] = {
-            "num_tiers": len(bank),
-            "policy": getattr(e, "tier_policy", "static"),
-            "names": [t.name for t in bank],
-        }
-    if getattr(engine, "_prefix", None) is not None:
-        out["prefix_cache"] = {
-            "min_hit_pages": e.prefix_min_hit_pages,
-            "lookups": engine.prefix_lookups,
-            "hits": engine.prefix_hits,
-            "hit_tokens": engine.prefix_hit_tokens,
-            "cow_copies": engine.cow_copies,
-            "reattached_pages": engine.reattached_pages,
-            "cached_pages": engine._prefix.pages,
-        }
-    if getattr(e, "spec_k", 0):
-        out["spec"] = {
-            "k": e.spec_k,
-            "adaptive": e.spec_adaptive,
-            "draft_mode": "parallel" if getattr(engine, "_parallel", False)
-            else "sequential",
-            "draft_kv_dtype": e.spec_draft_kv_dtype,
-        }
-    return out
+    """Engine provenance recorded inside every BENCH_*.json payload — a thin
+    delegate to :func:`repro.serving.telemetry.engine_provenance`. The schema
+    is generated CENTRALLY from the full ``EngineConfig`` dataclass plus the
+    telemetry-registry snapshot, so every benchmark payload carries identical
+    provenance keys and a new config field or counter shows up everywhere at
+    once instead of per-script."""
+    from repro.serving.telemetry import engine_provenance as _provenance
+
+    return _provenance(engine)

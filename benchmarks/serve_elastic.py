@@ -79,6 +79,7 @@ def per_tier_throughput(bank, ecfg_kw, requests, max_new) -> dict:
         }
     rows["_engine"] = {
         "decode_traces": eng.decode_traces,    # <= one per tier, ever
+        "jit_retraces": eng.stats_snapshot()["jit_retraces"],
         "engine_config": engine_provenance(eng),
     }
     return rows
@@ -91,6 +92,11 @@ def tier_switch_latency(bank, ecfg_kw, ticks: int = 6) -> dict:
     for t in range(len(bank)):                 # warm every tier's programs
         drive(eng, 2, 4, tier=t)
     traces0 = eng.decode_traces
+    # the registry's retrace detector generalizes this benchmark's original
+    # decode-trace delta: serve_jit_retraces_total counts compilation-cache
+    # misses on ANY (program, tier) pair that had already compiled, so the
+    # no-re-jit contract now covers prefill/chunk programs too
+    retraces0 = eng.metrics.retraces()
 
     eng.submit([5, 7, 11, 13], max_new_tokens=4 + 2 * ticks, tier=0)
     steady = []
@@ -109,7 +115,8 @@ def tier_switch_latency(bank, ecfg_kw, ticks: int = 6) -> dict:
         "switch_over_steady": round(
             switch_s / max(sum(steady) / len(steady), 1e-9), 2
         ),
-        "retraces_on_switch": eng.decode_traces - traces0,
+        "retraces_on_switch": eng.metrics.retraces() - retraces0,
+        "decode_traces_delta": eng.decode_traces - traces0,
         "tier_switches": eng.tier_switches,
     }
 

@@ -23,6 +23,16 @@ spike on the short requests); chunked prefill caps per-tick prefill work at
 ``prefill_chunk`` tokens, so short-request ITL stays flat while the long
 prompt streams in. Rows merge into the same ``BENCH_latency.json``.
 
+Percentile basis (changed with the telemetry registry): every TTFT figure —
+headline p50/p99 AND the per-class ``--mixed`` columns — is measured from the
+request's SCHEDULED arrival. The driver backdates ``submit(...,
+submitted_at=scheduled)`` so the engine's own ``serve_ttft_seconds``
+histogram records that basis, and the rows read their percentiles from the
+registry. Earlier revisions mixed bases across the ``--mixed`` arms
+(scheduled arrival for the headline, actual submit time for per-class
+columns), which understated TTFT exactly when a monolithic prefill blocked
+the driver loop — the effect under measurement.
+
   PYTHONPATH=src python -m benchmarks.serve_latency --quick
   PYTHONPATH=src python -m benchmarks.serve_latency --mixed --quick
 """
@@ -46,6 +56,8 @@ from repro.serving.engine import (
     decode_emitted_tokens,
 )
 
+from repro.serving.telemetry import request_itls, request_ttft
+
 from .common import emit, engine_provenance
 
 
@@ -65,25 +77,27 @@ def percentile(xs, p):
     return float(np.percentile(np.asarray(xs), p)) if len(xs) else float("nan")
 
 
-def drive_open_loop(engine, trace, slo_ms: float) -> tuple[dict, list, dict]:
-    """Submit the trace on the clock; tick the engine whenever it has work;
-    measure TTFT against each request's SCHEDULED arrival time. Latency math
-    runs on the monotonic clock (matching the engine's token timestamps);
-    deadlines are derived on the wall clock. Returns (metrics row, done,
-    scheduled arrival time per uid)."""
-    scheduled: dict[int, float] = {}
+def drive_open_loop(engine, trace, slo_ms: float) -> tuple[dict, list]:
+    """Submit the trace on the clock; tick the engine whenever it has work.
+    Every submit is backdated (``submitted_at``) to the request's SCHEDULED
+    arrival, so the engine's registry histograms (``serve_ttft_seconds``,
+    ``serve_itl_seconds``) record the scheduled-arrival basis and the row's
+    percentiles read straight out of them. Latency math runs on the
+    monotonic clock (matching the engine's token timestamps); deadlines
+    stay wall-clock. Returns (metrics row, done)."""
     done = []
     i = 0
     calls0 = getattr(engine, "decode_calls", 0)   # exclude warmup ticks
+    engine.metrics.reset_histograms()             # warmup observations too
     t0 = time.monotonic()
     wall0 = time.time()
     while i < len(trace) or engine.has_work:
         now = time.monotonic() - t0
         while i < len(trace) and trace[i][0] <= now:
             off, prompt, max_new = trace[i]
-            uid = engine.submit(prompt, max_new_tokens=max_new,
-                                deadline=wall0 + off + slo_ms / 1e3)
-            scheduled[uid] = t0 + off
+            engine.submit(prompt, max_new_tokens=max_new,
+                          deadline=wall0 + off + slo_ms / 1e3,
+                          submitted_at=t0 + off)
             i += 1
         if engine.has_work:
             done.extend(engine.step())
@@ -91,8 +105,16 @@ def drive_open_loop(engine, trace, slo_ms: float) -> tuple[dict, list, dict]:
             time.sleep(max(trace[i][0] - (time.monotonic() - t0), 0.0))
     dt = time.monotonic() - t0
 
-    ttft = [r.first_token_at - scheduled[r.uid] for r in done]
-    itl = [b - a for r in done for a, b in zip(r.token_times, r.token_times[1:])]
+    tel = engine.metrics
+    ttft = [request_ttft(r) for r in done if r.first_token_at]
+    itl = [g for r in done for g in request_itls(r)]
+
+    def pct(hist, xs, p):
+        # registry histogram when telemetry is on; raw list otherwise
+        if hist.count(tel.engine):
+            return hist.percentile(p, tel.engine)
+        return percentile(xs, p)
+
     tokens = sum(len(r.out_tokens) for r in done)
     decode_tokens = decode_emitted_tokens(done)
     return {
@@ -101,10 +123,10 @@ def drive_open_loop(engine, trace, slo_ms: float) -> tuple[dict, list, dict]:
         "wall_s": round(dt, 3),
         "admitted_req_per_s": round(len(done) / max(dt, 1e-9), 3),
         "tok_per_s": round(tokens / max(dt, 1e-9), 1),
-        "ttft_p50_ms": round(percentile(ttft, 50) * 1e3, 1),
-        "ttft_p99_ms": round(percentile(ttft, 99) * 1e3, 1),
+        "ttft_p50_ms": round(pct(tel.ttft, ttft, 50) * 1e3, 1),
+        "ttft_p99_ms": round(pct(tel.ttft, ttft, 99) * 1e3, 1),
         "itl_mean_ms": round(float(np.mean(itl)) * 1e3, 1) if itl else None,
-        "itl_p99_ms": round(percentile(itl, 99) * 1e3, 1) if itl else None,
+        "itl_p99_ms": round(pct(tel.itl, itl, 99) * 1e3, 1) if itl else None,
         "slo_ms": slo_ms,
         "slo_attainment": round(
             sum(t * 1e3 <= slo_ms for t in ttft) / max(len(ttft), 1), 3
@@ -122,7 +144,7 @@ def drive_open_loop(engine, trace, slo_ms: float) -> tuple[dict, list, dict]:
             round(engine.acceptance_rate, 3)
             if hasattr(engine, "acceptance_rate") else None
         ),
-    }, done, scheduled
+    }, done
 
 
 def warmup(engine, vocab: int, max_new: int):
@@ -169,7 +191,7 @@ def run(
     rows = {}
     for name, eng in engines.items():
         warmup(eng, cfg.vocab_size, max_new)
-        rows[name], _, _ = drive_open_loop(eng, trace, slo_ms)
+        rows[name], _ = drive_open_loop(eng, trace, slo_ms)
         rows[name]["engine"] = name
         rows[name]["kv_budget_tokens"] = padded_slots * max_len
         rows[name]["decode_slots"] = eng.ecfg.max_slots
@@ -219,12 +241,14 @@ def build_mixed_trace(n: int, rate_hz: float, vocab: int, max_new: int,
     return trace
 
 
-def _class_metrics(done, long_len: int, scheduled_ttft) -> dict:
-    """Short-request tail metrics: the requests a long prefill stalls."""
+def _class_metrics(done, long_len: int) -> dict:
+    """Short-request tail metrics: the requests a long prefill stalls.
+    Per-class TTFT uses ``request_ttft`` — the same scheduled-arrival basis
+    (backdated ``submitted_at``) as the headline columns and the registry
+    histogram, so the arms never mix timestamp bases again."""
     short = [r for r in done if len(r.prompt) < long_len]
     long_ = [r for r in done if len(r.prompt) >= long_len]
-    itl = [b - a for r in short
-           for a, b in zip(r.token_times, r.token_times[1:])]
+    itl = [g for r in short for g in request_itls(r)]
     return {
         "short_requests": len(short),
         "long_requests": len(long_),
@@ -232,10 +256,10 @@ def _class_metrics(done, long_len: int, scheduled_ttft) -> dict:
         "short_itl_p99_ms": round(percentile(itl, 99) * 1e3, 1),
         "short_itl_max_ms": round(max(itl) * 1e3, 1) if itl else None,
         "short_ttft_p99_ms": round(
-            percentile([scheduled_ttft[r.uid] for r in short], 99) * 1e3, 1
+            percentile([request_ttft(r) for r in short], 99) * 1e3, 1
         ),
         "long_ttft_p99_ms": round(
-            percentile([scheduled_ttft[r.uid] for r in long_], 99) * 1e3, 1
+            percentile([request_ttft(r) for r in long_], 99) * 1e3, 1
         ),
     }
 
@@ -285,15 +309,11 @@ def run_mixed(
         for _ in range(2):
             eng.submit(list(range(1, long_len + 1)), max_new_tokens=4)
             eng.run()
-        row, done, scheduled = drive_open_loop(eng, trace, slo_ms)
-        # per-class TTFT on the same SCHEDULED-arrival basis as the headline
-        # ttft columns (submitted_at lags schedule exactly when a monolithic
-        # prefill blocks the driver loop — the effect under measurement)
-        scheduled_ttft = {
-            r.uid: r.first_token_at - scheduled[r.uid] for r in done
-        }
-        row.update(_class_metrics(done, long_len, scheduled_ttft))
+        row, done = drive_open_loop(eng, trace, slo_ms)
+        row.update(_class_metrics(done, long_len))
         row["engine_config"] = engine_provenance(eng)
+        if pc:
+            row["prefix_hits"] = eng.prefix_hits
         rows[name] = row
     one, chk = rows["oneshot"], rows["chunked"]
     rows["summary"] = {
@@ -322,8 +342,7 @@ def run_mixed(
             chk["long_ttft_p99_ms"]
             / max(rows["chunked_prefix"]["long_ttft_p99_ms"], 1e-9), 2
         ),
-        "prefix_hits": rows["chunked_prefix"]["engine_config"]
-        ["prefix_cache"]["hits"],
+        "prefix_hits": rows["chunked_prefix"]["prefix_hits"],
     }
     return rows
 

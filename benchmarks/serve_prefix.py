@@ -24,8 +24,11 @@ engine config with ``prefix_cache`` as the only difference:
     (``reattached_pages`` > 0) and re-prefills only the final partial block —
     measured as the widest inter-token gap (the eviction gap) per mode.
 
-Counters (hits, hit tokens, CoW copies, reattached pages) ride in each row's
-``engine_config`` provenance via ``engine_provenance``. Results merge into
+Counters (hits, hit tokens, CoW copies, reattached pages) live in the
+engine's telemetry registry (``serve_prefix_events_total``) and ride in each
+row's ``engine_config`` provenance via ``engine_provenance``; TTFT
+percentiles read from the ``serve_ttft_seconds`` registry histogram (reset
+after warmup so the measured burst is clean). Results merge into
 ``BENCH_prefix.json``.
 
   PYTHONPATH=src python -m benchmarks.serve_prefix --quick
@@ -44,6 +47,7 @@ from repro.configs.base import get_arch
 from repro.models import model as model_lib
 from repro.serving.elastic import ModelBank
 from repro.serving.engine import EngineConfig, PagedServingEngine
+from repro.serving.telemetry import request_itls, request_ttft
 
 from .common import emit, engine_provenance
 
@@ -106,20 +110,23 @@ def run_shared_prefix(
             eng.submit(prompts[0], max_new_tokens=max_new)
             _drain(eng)
         hits0 = getattr(eng, "prefix_hits", 0)
+        eng.metrics.reset_histograms()         # measured burst only
         t0 = time.monotonic()
         for p in prompts:
-            eng.submit(p, max_new_tokens=max_new)
+            # the burst "arrives" at t0: backdate submitted_at so the
+            # registry TTFT histogram shares the burst-start basis
+            eng.submit(p, max_new_tokens=max_new, submitted_at=t0)
         done = _drain(eng)
         dt = time.monotonic() - t0
-        ttft = [r.first_token_at - t0 for r in done]
+        tel = eng.metrics
         # cache-hit requests = the measured burst (the cold publish ran in
         # warmup); keep the same slice for cache_off so rows compare 1:1
         rows[name] = {
             "requests": len(done),
             "wall_s": round(dt, 3),
             "tokens": sum(len(r.out_tokens) for r in done),
-            "ttft_p50_ms": round(percentile(ttft, 50) * 1e3, 1),
-            "ttft_p99_ms": round(percentile(ttft, 99) * 1e3, 1),
+            "ttft_p50_ms": round(tel.ttft.percentile(50, tel.engine) * 1e3, 1),
+            "ttft_p99_ms": round(tel.ttft.percentile(99, tel.engine) * 1e3, 1),
             "burst_hits": getattr(eng, "prefix_hits", 0) - hits0,
             "engine_config": engine_provenance(eng),
         }
@@ -171,13 +178,12 @@ def run_multi_turn(
                 0, cfg.vocab_size, size=turn_len
             ).tolist()
             hit0 = getattr(eng, "prefix_hit_tokens", 0)
-            t0 = time.monotonic()
             eng.submit(list(transcript), max_new_tokens=max_new)
             (req,) = _drain(eng)
             per_turn.append({
                 "turn": t,
                 "prompt_len": len(transcript),
-                "ttft_ms": round((req.first_token_at - t0) * 1e3, 1),
+                "ttft_ms": round(request_ttft(req) * 1e3, 1),
                 "hit_tokens": getattr(eng, "prefix_hit_tokens", 0) - hit0,
             })
             transcript += req.out_tokens
@@ -240,7 +246,7 @@ def run_evict_resume(
                 eng._evict(next(iter(eng._active)), [])
             done.extend(eng.step())
         (req,) = sorted(done, key=lambda r: r.uid)
-        gaps = [b - a for a, b in zip(req.token_times, req.token_times[1:])]
+        gaps = request_itls(req)
         rows[name] = {
             "out_tokens": len(req.out_tokens),
             "evictions": req.evictions,

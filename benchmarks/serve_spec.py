@@ -119,6 +119,8 @@ def run(
             key=lambda r: r["tok_per_s"],
         )
         rows[name]["engine_config"] = engine_provenance(eng)
+        # steady-state recompiles after the warmup pass (registry detector)
+        rows[name]["jit_retraces"] = eng.stats_snapshot()["jit_retraces"]
         rows[name]["kv_budget_bytes"] = (
             pool_bytes(cfg, eng.num_blocks, block_size, eng.ecfg.kv_dtype)
             + (pool_bytes(cfg, eng.num_blocks, block_size, draft_dtype)

@@ -11,15 +11,25 @@ eviction. All engines implement the ``serving.elastic.Engine`` protocol
 (submit / step / run / has_work / capabilities); the per-engine capability
 table is printed in ``--help``.
 
+Observability (docs/observability.md): ``--trace-out trace.json`` records a
+per-request span trace and writes Chrome trace-event JSON (open in Perfetto);
+``--metrics-port N`` serves the Prometheus text exposition of the engine's
+metrics registry on ``127.0.0.1:N/metrics`` for the duration of the run
+(0 = ephemeral); ``--metrics-out`` persists one scrape to a file. The
+printed stats derive from ``engine.stats_snapshot()`` — the same registry
+the exporter serves.
+
   python -m repro.launch.serve --arch salaad_llama_60m --reduced \
       --keep-ratios 1.0,0.6,0.3 --fmt factored --kappa 0.7 --requests 8 \
-      --block-size 16 --slo-ms 2000 --tier-policy pressure
+      --block-size 16 --slo-ms 2000 --tier-policy pressure \
+      --trace-out trace.json --metrics-port 0 --metrics-out metrics.txt
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+import urllib.request
 
 import jax
 import numpy as np
@@ -41,6 +51,7 @@ from repro.serving.engine import (
 )
 from repro.serving.slr_params import deployment_report
 from repro.serving.speculative import SpeculativeEngine
+from repro.serving.telemetry import start_metrics_server
 
 ENGINES = {
     "paged": PagedServingEngine,
@@ -76,19 +87,29 @@ def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
     done = engine.run()
     dt = time.monotonic() - t0
     total_tokens = sum(len(r.out_tokens) for r in done)
+    snap = engine.stats_snapshot()
     stats = {
         "requests": len(done),
         "tokens": total_tokens,
         "tok_per_s": round(total_tokens / max(dt, 1e-9), 2),
         "sample": done[0].out_tokens if done else [],
+        "steps": snap["steps"],
+        "jit_retraces": snap["jit_retraces"],
     }
     by_tier: dict[int, int] = {}
     for r in done:
         by_tier[r.tier] = by_tier.get(r.tier, 0) + len(r.out_tokens)
     if len(by_tier) > 1 or (by_tier and next(iter(by_tier)) != 0):
         stats["tokens_by_tier"] = {str(k): v for k, v in sorted(by_tier.items())}
-    ttft = [r.first_token_at - t0 for r in done if r.first_token_at]
-    if ttft:
+    # TTFT on the submitted_at basis (every request here is submitted before
+    # run() starts, so this matches the old run-start basis); percentiles
+    # come from the registry histogram when telemetry is on
+    ttft = [r.first_token_at - r.submitted_at for r in done if r.first_token_at]
+    tel = engine.metrics
+    if tel.ttft.count(tel.engine):
+        stats["ttft_p50_ms"] = round(tel.ttft.percentile(50, tel.engine) * 1e3, 1)
+        stats["ttft_p99_ms"] = round(tel.ttft.percentile(99, tel.engine) * 1e3, 1)
+    elif ttft:
         stats["ttft_p50_ms"] = round(float(np.percentile(ttft, 50)) * 1e3, 1)
         stats["ttft_p99_ms"] = round(float(np.percentile(ttft, 99)) * 1e3, 1)
     if slo_ms is not None and ttft:
@@ -115,6 +136,46 @@ def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
         stats["tokens_per_step"] = round(
             decode_emitted_tokens(done) / max(engine.decode_calls, 1), 2
         )
+    return stats
+
+
+def serve_with_observability(engine, args, vocab: int, tiers=(None,)) -> dict:
+    """Run ``serve_batch`` with the requested exports attached: a request
+    tracer when ``--trace-out``/``--trace-events`` is set, and a live
+    Prometheus endpoint when ``--metrics-port`` is set (``--metrics-out``
+    scrapes it over HTTP so CI validates the real exposition path)."""
+    tracer = None
+    if args.trace_out or args.trace_events:
+        tracer = engine.start_trace()
+    server = None
+    if args.metrics_port is not None:
+        server = start_metrics_server(engine.metrics.registry,
+                                      port=args.metrics_port)
+    stats = serve_batch(engine, vocab, args.requests, args.max_new,
+                        args.seed, args.slo_ms, tiers=tiers)
+    if server is not None:
+        port = server.server_address[1]
+        stats["metrics_port"] = port
+        if args.metrics_out:
+            with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics"
+            ) as resp:
+                text = resp.read().decode()
+            with open(args.metrics_out, "w") as f:
+                f.write(text)
+            stats["metrics_out"] = args.metrics_out
+        server.shutdown()
+    elif args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(engine.metrics.registry.prometheus_text())
+        stats["metrics_out"] = args.metrics_out
+    if tracer is not None:
+        if args.trace_out:
+            tracer.save_chrome(args.trace_out)
+            stats["trace_out"] = args.trace_out
+        if args.trace_events:
+            tracer.save_jsonl(args.trace_events)
+            stats["trace_events"] = args.trace_events
     return stats
 
 
@@ -179,6 +240,20 @@ def main():
                          "(appended to the bank as its cheapest tier)")
     ap.add_argument("--spec-adaptive", action="store_true",
                     help="adapt the draft window from observed acceptance")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON of the run here "
+                         "(one track per slot + one per jitted program; "
+                         "open in Perfetto — see docs/observability.md)")
+    ap.add_argument("--trace-events", default=None,
+                    help="write the structured JSONL event log here "
+                         "(same events as --trace-out, one dict per line)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the Prometheus text exposition on "
+                         "127.0.0.1:PORT/metrics during the run (0 = "
+                         "ephemeral; the bound port rides in the stats)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="persist one Prometheus scrape to this file after "
+                         "the run (over HTTP when --metrics-port is set)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -230,9 +305,10 @@ def main():
     if args.keep_ratios is None:
         bank = ModelBank.single(cfg, params)
         engine = engine_cls(bank, ecfg)
-        print(json.dumps({"budget": None, "fmt": "dense-init",
-                          **serve_batch(engine, cfg.vocab_size, args.requests,
-                                        args.max_new, args.seed, args.slo_ms)}))
+        print(json.dumps({
+            "budget": None, "fmt": "dense-init",
+            **serve_with_observability(engine, args, cfg.vocab_size),
+        }))
         return
 
     # one SALAAD state, ONE bank, a spectrum of served capacities — every
@@ -282,8 +358,8 @@ def main():
         # to its target tier; its draft tier only drafts)
         tiers = (None,) if engine_cls is SpeculativeEngine \
             else tuple(range(len(bank)))
-    stats = serve_batch(engine, cfg.vocab_size, args.requests, args.max_new,
-                        args.seed, args.slo_ms, tiers=tiers)
+    stats = serve_with_observability(engine, args, cfg.vocab_size,
+                                     tiers=tiers)
     print(json.dumps({
         "fmt": args.fmt,
         "bank": bank.report(),

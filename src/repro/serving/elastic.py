@@ -255,10 +255,14 @@ class Engine(Protocol):
 
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                deadline: float | None = None,
-               tier: int | None = None) -> int:
+               tier: int | None = None,
+               submitted_at: float | None = None) -> int:
         """Enqueue a request; returns its uid. ``tier`` pins the request to a
-        bank tier (None = the engine's default tier). Raises
-        ``RequestRejected`` when the request can never be served."""
+        bank tier (None = the engine's default tier). ``submitted_at``
+        (monotonic clock) lets open-loop harnesses backdate the submission to
+        the SCHEDULED arrival — the one timestamp basis every TTFT metric
+        uses (None = now). Raises ``RequestRejected`` when the request can
+        never be served."""
         ...
 
     def step(self) -> list:
@@ -276,6 +280,14 @@ class Engine(Protocol):
     def capabilities(cls) -> dict:
         """Structured capability report: which cache families this engine
         serves, its KV layout, and per-feature availability."""
+        ...
+
+    def stats_snapshot(self) -> dict:
+        """Host-side serving stats: scheduler/jit counters plus the
+        ``serving/telemetry.py`` metrics-registry snapshot. Every engine
+        also carries ``engine.metrics`` (an ``EngineTelemetry`` — one metric
+        schema across engines, Prometheus-exportable) and ``start_trace()``
+        (a ``serving/trace.py`` span tracer with Chrome-trace export)."""
         ...
 
 

@@ -96,6 +96,8 @@ from ..models import transformer as transformer_lib
 from .deployed import DeployedModel
 from .elastic import ModelBank, TierController, TierControllerConfig
 from .prefix_cache import PrefixCache
+from .telemetry import EngineTelemetry, NullTelemetry
+from .trace import RequestTracer
 
 log = logging.getLogger(__name__)
 
@@ -156,6 +158,8 @@ class Request:
     deadline: float | None = None    # absolute WALL-CLOCK SLO deadline
     tier: int = 0                    # requested ModelBank tier (0 = largest)
     evictions: int = 0
+    requeued_at: float = 0.0         # last eviction's re-queue stamp — the
+    #                                  basis for a RE-admission's queue wait
     # tokens this request emitted from a PREFILL/CHUNK program (one per
     # admission that reached the end of its prompt; a mid-prefill eviction
     # emits nothing, so this is NOT simply 1 + evictions)
@@ -210,6 +214,13 @@ class EngineConfig:
     #                                        target distribution)
     spec_target_tier: int = 0       # bank tier the verifier serves
     spec_draft_tier: int = -1       # bank tier that drafts (-1 = cheapest)
+    # observability (serving/telemetry.py, serving/trace.py) — host-side
+    # only, never touches the device path:
+    telemetry: bool = True          # metrics registry + per-program timing /
+    #                                 retrace detection; False = every hook is
+    #                                 a no-op (NullTelemetry)
+    trace: bool = False             # per-request span tracer (Chrome-trace /
+    #                                 JSONL export via engine.tracer)
 
     def __post_init__(self):
         """Validate at CONSTRUCTION: a bad config used to surface as a
@@ -471,8 +482,6 @@ class ServingEngine:
         self._slot_tier = np.zeros(ecfg.max_slots, np.int64)
         self._tier_shift = 0
         self.tier_controller: TierController | None = None
-        self.tier_switches = 0      # mid-stream effective-tier changes
-        self.downshift_ticks = 0    # ticks served with a positive shift
         self._queue: list[Request] = []
         self._active: dict[int, Request] = {}   # slot -> request
         # slot -> tokens prefilled so far; a slot present here is MID-PREFILL
@@ -485,25 +494,92 @@ class ServingEngine:
         self._base_key = jax.random.PRNGKey(ecfg.seed)
 
         # instrumentation: device calls vs (re)traces — tests assert the
-        # decode loop is one device call per step and compiles exactly once
+        # decode loop is one device call per step and compiles exactly once.
+        # The ``*_calls``/``*_traces`` pairs stay PLAIN INTS on purpose: the
+        # trace counters increment as a python side effect INSIDE traced
+        # functions (so they count traces only), which a registry-backed
+        # property could not express; the retrace detector reads their deltas
         self.decode_calls = 0
         self.decode_traces = 0
         self.prefill_calls = 0
         self.prefill_traces = 0
-        self.evictions = 0
+
+        # observability: the unified metrics registry (+ optional tracer).
+        # The legacy counter attributes (evictions, tier_switches,
+        # downshift_ticks, prefix_*, cow_copies, ...) are now read-only
+        # properties over this registry — one metrics substrate everywhere
+        self.metrics = (EngineTelemetry if ecfg.telemetry
+                        else NullTelemetry)(type(self).__name__)
+        self.tracer: RequestTracer | None = None
+        if ecfg.trace:
+            self.start_trace()
+
+    # ----------------------------------------------------- observability ---
+
+    def start_trace(self, tracer: RequestTracer | None = None) -> RequestTracer:
+        """Attach a per-request span tracer (serving/trace.py); subsequent
+        activity records slot-track spans and program-track slices. Returns
+        the tracer (``tracer.save_chrome(path)`` / ``save_jsonl(path)``)."""
+        self.tracer = tracer if tracer is not None \
+            else RequestTracer(type(self).__name__)
+        self.metrics.tracer = self.tracer
+        return self.tracer
+
+    # Migrated ad-hoc counters: read-only views over the metrics registry
+    # (the registry is the single writer — see the hooks at the old
+    # increment sites). With telemetry=False these all read 0.
+
+    @property
+    def evictions(self) -> int:
+        return int(self.metrics.counter_value(self.metrics.evictions))
+
+    @property
+    def tier_switches(self) -> int:
+        return int(self.metrics.counter_value(self.metrics.tier_switches))
+
+    @property
+    def downshift_ticks(self) -> int:
+        return int(self.metrics.counter_value(self.metrics.downshift_ticks))
+
+    def stats_snapshot(self) -> dict:
+        """Host-side serving stats: scheduler/jit counters plus the full
+        metrics-registry snapshot. ``launch/serve.py`` derives its summary
+        from this, and the Prometheus exporter serves the same registry."""
+        return {
+            "engine": type(self).__name__,
+            "steps": self._steps,
+            "decode_calls": self.decode_calls,
+            "decode_traces": self.decode_traces,
+            "prefill_calls": self.prefill_calls,
+            "prefill_traces": self.prefill_traces,
+            "jit_retraces": self.metrics.retraces(),
+            "metrics": self.metrics.snapshot(),
+        }
 
     # ------------------------------------------------------------ intake ---
 
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                deadline: float | None = None,
-               tier: int | None = None) -> int:
-        self._validate(prompt, max_new_tokens)
+               tier: int | None = None,
+               submitted_at: float | None = None) -> int:
+        """Enqueue a request. ``submitted_at`` (monotonic clock) lets open-
+        loop harnesses backdate the submission to the SCHEDULED arrival, so
+        TTFT/queue-wait metrics share one basis however the driver batches
+        its submits; None = now."""
+        try:
+            self._validate(prompt, max_new_tokens)
+            tier_r = self._resolve_tier(tier)
+        except RequestRejected:
+            self.metrics.on_reject()
+            raise
         self._uid += 1
         self._queue.append(
             Request(self._uid, list(prompt), max_new_tokens,
-                    submitted_at=_now(), deadline=deadline,
-                    tier=self._resolve_tier(tier))
+                    submitted_at=_now() if submitted_at is None
+                    else submitted_at,
+                    deadline=deadline, tier=tier_r)
         )
+        self.metrics.on_submit()
         return self._uid
 
     def _validate(self, prompt: list[int], max_new_tokens: int):
@@ -531,7 +607,10 @@ class ServingEngine:
         for slot, req in self._active.items():
             eff = self._effective_tier(req)
             if eff != self._slot_tier[slot]:
-                self.tier_switches += 1
+                self.metrics.inc(self.metrics.tier_switches)
+                if self.tracer is not None:
+                    self.tracer.instant(slot, "tier_switch", uid=req.uid,
+                                        frm=int(self._slot_tier[slot]), to=eff)
                 self._slot_tier[slot] = eff
 
     def _tier_groups(self, slots) -> list[tuple[int, list[int]]]:
@@ -634,9 +713,15 @@ class ServingEngine:
         admitted: list[tuple[int, Request]] = []
         for req in reqs:
             slot = free.pop()
+            self.metrics.on_admit(req, slot, now,
+                                  prefill_tokens=len(req.prompt))
             req.admitted_at = now
             self._active[slot] = req
             self._slot_tier[slot] = self._effective_tier(req)
+            if self.tracer is not None:
+                self.tracer.request_begin(slot, req.uid, t=now, tier=req.tier)
+                self.tracer.begin_span(slot, "prefill", t=now,
+                                       tokens=len(req.prompt))
             admitted.append((slot, req))
         for tier, slots in self._tier_groups(slot for slot, _ in admitted):
             group = [(slot, self._active[slot]) for slot in slots]
@@ -648,13 +733,16 @@ class ServingEngine:
                 tokens[i, : len(req.prompt)] = req.prompt
                 lengths[i] = len(req.prompt)
                 slot_ids[i] = slot
-            first, self.cache = self._prefill(
-                self._tier_params[tier], jnp.asarray(tokens),
-                jnp.asarray(lengths), jnp.asarray(slot_ids), self.cache,
-                jnp.asarray(step, jnp.int32),
-            )
-            self.prefill_calls += 1
-            firsts = np.asarray(first)           # one fetch per tier group
+            with self.metrics.measure_program(
+                f"prefill[{bucket}]", tier, traces=lambda: self.prefill_traces
+            ):
+                first, self.cache = self._prefill(
+                    self._tier_params[tier], jnp.asarray(tokens),
+                    jnp.asarray(lengths), jnp.asarray(slot_ids), self.cache,
+                    jnp.asarray(step, jnp.int32),
+                )
+                self.prefill_calls += 1
+                firsts = np.asarray(first)       # one fetch per tier group
             for i, (slot, req) in enumerate(group):
                 req.prefill_emitted += 1
                 self._record(slot, req, int(firsts[i]), free, done)
@@ -663,14 +751,34 @@ class ServingEngine:
         now = _now()
         req.out_tokens.append(tok)
         req.token_times.append(now)
-        if req.first_token_at == 0.0:
+        first = req.first_token_at == 0.0
+        if first:
             req.first_token_at = now
+        # the ONE emission point: serve_tokens_total{kind="emitted"} counts
+        # each generated token exactly once, however many times eviction
+        # re-prefills its context (re-work lands in kind="prefill_compute")
+        self.metrics.on_token(req, now, first)
+        tr = self.tracer
+        if tr is not None and tr.has_open(slot, "prefill"):
+            # prefill (or resume re-prefill) just yielded its token: close
+            # the prefill span and open the decode envelope
+            tr.end_span(slot, "prefill", t=now)
+            if first:
+                tr.instant(slot, "first_token", t=now, uid=req.uid)
+            tr.begin_span(slot, "decode", t=now, uid=req.uid)
         self._last_token[slot] = tok
         if len(req.out_tokens) >= req.max_new_tokens or (
             self.ecfg.eos_token is not None and tok == self.ecfg.eos_token
         ):
             req.done = True
             req.finished_at = now
+            self.metrics.on_finish()
+            if tr is not None:
+                if tr.has_open(slot, "decode"):
+                    tr.end_span(slot, "decode", t=now)
+                tr.request_end(slot, req.uid, t=now,
+                               tokens=len(req.out_tokens),
+                               evictions=req.evictions)
             done.append(req)
             self._retire(slot, req)
             del self._active[slot]
@@ -703,6 +811,12 @@ class ServingEngine:
         advance mid-prefill slots by one chunk, then one jitted decode step
         per active tier over the decode-phase slots. Returns requests that
         finished this tick."""
+        with self.metrics.measure_tick():
+            done = self._step_inner()
+            self._update_gauges()
+        return done
+
+    def _step_inner(self) -> list[Request]:
         done: list[Request] = []
         s = self.ecfg.max_slots
         self._steps += 1
@@ -721,6 +835,16 @@ class ServingEngine:
         if active.any():
             self._decode_tick(active, free, done)
         return done
+
+    def _update_gauges(self):
+        """End-of-tick pool/queue gauges — host counters only, no device
+        reads (the paged engine adds page-pool occupancy). Short-circuits
+        when telemetry is off so gauge ARGUMENTS cost nothing either."""
+        if not self.metrics.enabled:
+            return
+        self.metrics.set_pool(queue=len(self._queue),
+                              active=len(self._active),
+                              shift=self._tier_shift)
 
     def _decode_tick(self, active: np.ndarray, free: list[int],
                      done: list[Request]):
@@ -741,12 +865,15 @@ class ServingEngine:
         for tier, slots in self._tier_groups(decode_slots):
             mask = np.zeros((s,), bool)
             mask[slots] = True
-            nxt, self.cache = self._decode(
-                self._tier_params[tier], tok_dev, self._device_cache(),
-                jnp.asarray(mask), step_dev,
-            )
-            self.decode_calls += 1
-            toks = np.asarray(nxt)           # one host sync per active tier
+            with self.metrics.measure_program(
+                "decode", tier, traces=lambda: self.decode_traces
+            ):
+                nxt, self.cache = self._decode(
+                    self._tier_params[tier], tok_dev, self._device_cache(),
+                    jnp.asarray(mask), step_dev,
+                )
+                self.decode_calls += 1
+                toks = np.asarray(nxt)       # one host sync per active tier
             out[slots] = toks[slots]
         for slot, req in list(self._active.items()):
             if slot in self._progress:
@@ -943,11 +1070,6 @@ class PagedServingEngine(ServingEngine):
         # runs, and junk rows written meanwhile must not land in pages the
         # slot attached read-only
         self._len_reset: dict[int, int] = {}
-        self.prefix_lookups = 0
-        self.prefix_hits = 0
-        self.prefix_hit_tokens = 0      # prompt tokens served from the index
-        self.cow_copies = 0             # pages privatized by copy-on-write
-        self.reattached_pages = 0       # pages evicted slots got back on resume
         if ecfg.tier_policy == "pressure":
             self.tier_controller = TierController(
                 len(self.bank),
@@ -980,6 +1102,47 @@ class PagedServingEngine(ServingEngine):
         )
         return caps
 
+    # Prefix-cache counters: registry-backed read-only views (the hooks in
+    # ``_admit`` are the single writers). With telemetry=False these read 0.
+
+    @property
+    def prefix_lookups(self) -> int:
+        return int(self.metrics.counter_value(self.metrics.prefix, "lookups"))
+
+    @property
+    def prefix_hits(self) -> int:
+        return int(self.metrics.counter_value(self.metrics.prefix, "hits"))
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        """Prompt tokens served from the index instead of prefill compute."""
+        return int(self.metrics.counter_value(self.metrics.tokens,
+                                              "prefix_hit"))
+
+    @property
+    def cow_copies(self) -> int:
+        """Pages privatized by copy-on-write."""
+        return int(self.metrics.counter_value(self.metrics.prefix,
+                                              "cow_copies"))
+
+    @property
+    def reattached_pages(self) -> int:
+        """Pages evicted slots got back on resume."""
+        return int(self.metrics.counter_value(self.metrics.prefix,
+                                              "reattached_pages"))
+
+    def _update_gauges(self):
+        if not self.metrics.enabled:
+            return
+        super()._update_gauges()
+        # _prefix.pages (an O(1) count of index-held pages), NOT
+        # reclaimable_pages — that walks the whole radix tree and a per-tick
+        # walk is exactly the overhead telemetry promises not to add
+        self.metrics.set_pool(
+            free=self.allocator.free_blocks,
+            cached=self._prefix.pages if self._prefix is not None else 0,
+        )
+
     def _update_tier_shift(self):
         """Integrate page pressure into the serving-tier downshift (BEFORE
         ``_pre_decode`` can evict anyone — the controller spends capacity
@@ -995,7 +1158,7 @@ class PagedServingEngine(ServingEngine):
             free_like / self.num_blocks
         )
         if self._tier_shift > 0:
-            self.downshift_ticks += 1
+            self.metrics.inc(self.metrics.downshift_ticks)
 
     # ------------------------------------------------------------ intake ---
 
@@ -1090,7 +1253,7 @@ class PagedServingEngine(ServingEngine):
             hit: list[int] = []
             s0 = 0           # prefill resumes here; tokens < s0 are cached
             if self._prefix is not None:
-                self.prefix_lookups += 1
+                self.metrics.prefix_event("lookups")
                 hit = self._prefix.match(ptoks)
                 if len(hit) < self.ecfg.prefix_min_hit_pages:
                     hit = []
@@ -1132,21 +1295,35 @@ class PagedServingEngine(ServingEngine):
                 cow_pairs.append((pages[-1], copy))
                 self.allocator.release([pages[-1]])  # drop the shared ref —
                 pages[-1] = copy                     # the index keeps its own
-                self.cow_copies += 1
+                self.metrics.prefix_event("cow_copies")
             pages += fresh
             self._queue.pop(0)
             slot = free.pop()
-            req.admitted_at = _now()
+            now = _now()
+            # prefill_compute = the suffix this admission actually schedules
+            # through a prefill/chunk program (the hit share never recomputes)
+            self.metrics.on_admit(req, slot, now,
+                                  prefill_tokens=plen - s0, hit_tokens=s0)
+            req.admitted_at = now
             self._active[slot] = req
             self._slot_tier[slot] = self._effective_tier(req)
             self._pages[slot] = pages
             self._table[slot, : len(pages)] = pages
             self._table_dirty = True
+            tr = self.tracer
+            if tr is not None:
+                tr.request_begin(slot, req.uid, t=now, tier=req.tier,
+                                 resume=bool(req.evictions))
+                tr.begin_span(slot, "prefill", t=now, tokens=plen - s0)
+                if hit:
+                    tr.instant(slot, "prefix_hit", t=now, pages=len(hit),
+                               tokens=s0)
+                if cow:
+                    tr.instant(slot, "cow", t=now)
             if hit:
-                self.prefix_hits += 1
-                self.prefix_hit_tokens += s0
+                self.metrics.prefix_event("hits")
                 if req.evictions:
-                    self.reattached_pages += len(hit)
+                    self.metrics.prefix_event("reattached_pages", len(hit))
                 # the slot's device length is stale (previous occupant) until
                 # its first chunk program resets it; junk rows written by
                 # other programs this tick must not land in attached pages
@@ -1237,7 +1414,8 @@ class PagedServingEngine(ServingEngine):
         pad = pairs + [(0, 0)] * (n - len(pairs))
         src = jnp.asarray([p for p, _ in pad], jnp.int32)
         dst = jnp.asarray([q for _, q in pad], jnp.int32)
-        self._apply_cow(src, dst)
+        with self.metrics.measure_program(f"page_copy[{n}]"):
+            self._apply_cow(src, dst)
 
     def _apply_cow(self, src: jax.Array, dst: jax.Array):
         """Hook: the speculative engine also copies its draft pools here —
@@ -1249,13 +1427,18 @@ class PagedServingEngine(ServingEngine):
                           tier: int = 0):
         """Device portion of admission (hook: the speculative engine also
         prefills the draft page pools here). Returns first tokens (host)."""
-        first, self.cache = self._prefill(
-            self._tier_params[tier], jnp.asarray(tokens), jnp.asarray(lengths),
-            jnp.asarray(slot_ids), jnp.asarray(page_map), self.cache,
-            jnp.asarray(step, jnp.int32),
-        )
-        self.prefill_calls += 1
-        return np.asarray(first)
+        with self.metrics.measure_program(
+            f"prefill[{tokens.shape[1]}]", tier,
+            traces=lambda: self.prefill_traces,
+        ):
+            first, self.cache = self._prefill(
+                self._tier_params[tier], jnp.asarray(tokens),
+                jnp.asarray(lengths), jnp.asarray(slot_ids),
+                jnp.asarray(page_map), self.cache,
+                jnp.asarray(step, jnp.int32),
+            )
+            self.prefill_calls += 1
+            return np.asarray(first)
 
     def _prefill_progress(self, free: list[int], done: list[Request],
                           step: int):
@@ -1335,8 +1518,17 @@ class PagedServingEngine(ServingEngine):
                 counts[slot] = c
                 slot_ids[slot] = slot
                 starts[slot] = p
+            t0 = _now()
             firsts = self._chunk_call(tokens, counts, slot_ids, starts, step,
                                       tier)
+            if self.tracer is not None:
+                t1 = _now()
+                for slot in tier_slots:
+                    if slot in self._active:
+                        self.tracer.begin_span(slot, "prefill_chunk", t=t0,
+                                               start=int(starts[slot]),
+                                               tokens=int(counts[slot]))
+                        self.tracer.end_span(slot, "prefill_chunk", t=t1)
             for slot in tier_slots:
                 req = self._active.get(slot)
                 if req is None:
@@ -1352,13 +1544,18 @@ class PagedServingEngine(ServingEngine):
                     tier: int = 0):
         """Device portion of a chunk tick (hook: the speculative engine also
         runs the draft's chunk here). Returns sampled tokens (host)."""
-        first, self.cache = self._chunk_prog(
-            self._tier_params[tier], jnp.asarray(tokens), jnp.asarray(counts),
-            jnp.asarray(slot_ids), jnp.asarray(starts), self._device_cache(),
-            jnp.asarray(step, jnp.int32),
-        )
-        self.chunk_calls += 1
-        return np.asarray(first)
+        with self.metrics.measure_program(
+            f"chunk[{tokens.shape[1]}]", tier,
+            traces=lambda: self.chunk_traces,
+        ):
+            first, self.cache = self._chunk_prog(
+                self._tier_params[tier], jnp.asarray(tokens),
+                jnp.asarray(counts), jnp.asarray(slot_ids),
+                jnp.asarray(starts), self._device_cache(),
+                jnp.asarray(step, jnp.int32),
+            )
+            self.chunk_calls += 1
+            return np.asarray(first)
 
     def _pre_decode(self, free: list[int], done: list[Request]):
         """Grow each active slot's pages to cover this tick's KV writes; evict
@@ -1413,7 +1610,16 @@ class PagedServingEngine(ServingEngine):
         ahead of fresh ones with the same deadline — see ``_order_queue``)."""
         req = self._active.pop(slot)
         req.evictions += 1
-        self.evictions += 1
+        req.requeued_at = _now()
+        self.metrics.on_evict()
+        tr = self.tracer
+        if tr is not None:
+            now = req.requeued_at
+            for name in ("decode", "prefill"):
+                while tr.has_open(slot, name):
+                    tr.end_span(slot, name, t=now, aborted=True)
+            tr.instant(slot, "evicted", t=now, uid=req.uid)
+            tr.end_span(slot, "request", t=now, uid=req.uid, evicted=True)
         self._retire(slot, req)
         self._release(slot)
         self._queue.append(req)
@@ -1524,14 +1730,27 @@ class ReferenceEngine:
         self._queue: list[Request] = []
         self._active: dict[int, Request] = {}   # slot -> request
         self._uid = 0
+        self._steps = 0
         self._slot_len = [0] * ecfg.max_slots
 
         self.cache = model_lib.init_cache(
             arch_cfg, ecfg.max_slots, ecfg.max_len, dtype=jnp.float32
         )
-        self._decode = jax.jit(
-            lambda p, tok, cache: model_lib.decode_step(p, tok, cache, arch_cfg)
-        )
+        self.decode_calls = 0
+        self.decode_traces = 0   # python side effect below: counts traces only
+
+        def _decode_fn(p, tok, cache):
+            self.decode_traces += 1
+            return model_lib.decode_step(p, tok, cache, arch_cfg)
+
+        self._decode = jax.jit(_decode_fn)
+        # the same telemetry schema as the batched engines (the registry is
+        # shared infrastructure, not a paged-engine feature)
+        self.metrics = (EngineTelemetry if ecfg.telemetry
+                        else NullTelemetry)(type(self).__name__)
+        self.tracer: RequestTracer | None = None
+        if ecfg.trace:
+            self.start_trace()
 
     @classmethod
     def capabilities(cls) -> dict:
@@ -1552,18 +1771,45 @@ class ReferenceEngine:
             },
         }
 
+    # ----------------------------------------------------- observability ---
+
+    start_trace = ServingEngine.start_trace
+
+    def stats_snapshot(self) -> dict:
+        """Same shape as the batched engines' snapshot; the reference loop
+        has no prefill program (prompts insert token-by-token through the
+        decode step), so the prefill counters report 0."""
+        return {
+            "engine": type(self).__name__,
+            "steps": self._steps,
+            "decode_calls": self.decode_calls,
+            "decode_traces": self.decode_traces,
+            "prefill_calls": 0,
+            "prefill_traces": 0,
+            "jit_retraces": self.metrics.retraces(),
+            "metrics": self.metrics.snapshot(),
+        }
+
     # ------------------------------------------------------------ intake ---
 
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                deadline: float | None = None,
-               tier: int | None = None) -> int:
-        _validate_request(prompt, max_new_tokens, self.ecfg.max_len)
-        t = _resolve_request_tier(self.bank, self._default_tier, tier)
+               tier: int | None = None,
+               submitted_at: float | None = None) -> int:
+        try:
+            _validate_request(prompt, max_new_tokens, self.ecfg.max_len)
+            t = _resolve_request_tier(self.bank, self._default_tier, tier)
+        except RequestRejected:
+            self.metrics.on_reject()
+            raise
         self._uid += 1
         self._queue.append(
             Request(self._uid, list(prompt), max_new_tokens,
-                    submitted_at=_now(), deadline=deadline, tier=t)
+                    submitted_at=_now() if submitted_at is None
+                    else submitted_at,
+                    deadline=deadline, tier=t)
         )
+        self.metrics.on_submit()
         return self._uid
 
     @property
@@ -1583,12 +1829,28 @@ class ReferenceEngine:
         """One engine tick (Engine protocol): admit into free slots, then one
         token for every active slot (the seed per-slot loop — one device call
         and one host sync per slot)."""
+        with self.metrics.measure_tick():
+            done = self._step_inner()
+            self.metrics.set_pool(queue=len(self._queue),
+                                  active=len(self._active))
+        return done
+
+    def _step_inner(self) -> list[Request]:
         done: list[Request] = []
+        self._steps += 1
+        tr = self.tracer
         free = [s for s in range(self.ecfg.max_slots) if s not in self._active]
         while self._queue and free:
             slot = free.pop()
             req = self._queue.pop(0)
+            now = _now()
+            self.metrics.on_admit(req, slot, now,
+                                  prefill_tokens=len(req.prompt))
+            req.admitted_at = now
             self._active[slot] = req
+            if tr is not None:
+                tr.request_begin(slot, req.uid, t=now, tier=req.tier)
+                tr.begin_span(slot, "prefill", t=now, tokens=len(req.prompt))
             self._prefill_into_slot(slot, req)
         for slot, req in list(self._active.items()):
             last = (req.out_tokens or req.prompt)[-1]
@@ -1596,14 +1858,27 @@ class ReferenceEngine:
             req.out_tokens.append(int(nxt))
             now = _now()
             req.token_times.append(now)
-            if req.first_token_at == 0.0:
+            first = req.first_token_at == 0.0
+            if first:
                 req.first_token_at = now
+            self.metrics.on_token(req, now, first)
+            if tr is not None and tr.has_open(slot, "prefill"):
+                tr.end_span(slot, "prefill", t=now)
+                if first:
+                    tr.instant(slot, "first_token", t=now, uid=req.uid)
+                tr.begin_span(slot, "decode", t=now, uid=req.uid)
             if (
                 len(req.out_tokens) >= req.max_new_tokens
                 or (self.ecfg.eos_token is not None and nxt == self.ecfg.eos_token)
             ):
                 req.done = True
                 req.finished_at = now
+                self.metrics.on_finish()
+                if tr is not None:
+                    if tr.has_open(slot, "decode"):
+                        tr.end_span(slot, "decode", t=now)
+                    tr.request_end(slot, req.uid, t=now,
+                                   tokens=len(req.out_tokens))
                 done.append(req)
                 del self._active[slot]
         return done
@@ -1626,8 +1901,13 @@ class ReferenceEngine:
         )
         sub_cache = sub_cache._replace(length=jnp.asarray(self._slot_len[slot], jnp.int32))
         tok = jnp.asarray([[token]], jnp.int32)
-        params = self._tier_params[self._active[slot].tier]
-        logits, new_sub = self._decode(params, tok, sub_cache)
+        req = self._active[slot]
+        params = self._tier_params[req.tier]
+        with self.metrics.measure_program(
+            "decode_ref", req.tier, traces=lambda: self.decode_traces
+        ):
+            logits, new_sub = self._decode(params, tok, sub_cache)
+            self.decode_calls += 1
 
         def write_back(full, sub):
             if full.ndim >= 2 and full.shape[1] == self.ecfg.max_slots:

@@ -341,9 +341,10 @@ class SpeculativeEngine(PagedServingEngine):
             if ecfg.spec_adaptive else None
         )
 
-        # acceptance accounting (benchmarks + adaptive feedback)
-        self.drafted_tokens = 0
-        self.accepted_tokens = 0
+        # acceptance accounting (benchmarks + adaptive feedback): drafted /
+        # accepted live in the metrics registry (see the properties below);
+        # the ADAPTIVE feedback reads only the plain host-side _accept_ema,
+        # so telemetry=False never changes scheduling behavior
         self.spec_ticks = 0
         self._accept_ema = np.full((ecfg.max_slots,), np.nan)
         # parallel schedule: per-slot guess window for the NEXT tick (host
@@ -397,6 +398,19 @@ class SpeculativeEngine(PagedServingEngine):
         return self._target_tier
 
     # ------------------------------------------------------------- metrics ---
+
+    @property
+    def drafted_tokens(self) -> int:
+        """Draft proposals offered to the verifier, lifetime (registry-backed
+        view over serve_spec_tokens_total{kind="drafted"})."""
+        return int(self.metrics.counter_value(self.metrics.spec_tokens,
+                                              "drafted"))
+
+    @property
+    def accepted_tokens(self) -> int:
+        """Draft proposals the verifier accepted, lifetime."""
+        return int(self.metrics.counter_value(self.metrics.spec_tokens,
+                                              "accepted"))
 
     @property
     def acceptance_rate(self) -> float:
@@ -560,23 +574,33 @@ class SpeculativeEngine(PagedServingEngine):
                           tier: int = 0):
         # `tier` is the base engine's grouping hook; here it is always the
         # target tier (the draft prefills alongside in the same program)
-        first, self.cache, self._dpools = self._prefill2(
-            self.params, self.draft_params, jnp.asarray(tokens),
-            jnp.asarray(lengths), jnp.asarray(slot_ids), jnp.asarray(page_map),
-            self.cache, self._dpools, jnp.asarray(step, jnp.int32),
-        )
-        self.prefill_calls += 1
-        return np.asarray(first)
+        with self.metrics.measure_program(
+            f"prefill[{tokens.shape[1]}]", tier,
+            traces=lambda: self.prefill_traces,
+        ):
+            first, self.cache, self._dpools = self._prefill2(
+                self.params, self.draft_params, jnp.asarray(tokens),
+                jnp.asarray(lengths), jnp.asarray(slot_ids),
+                jnp.asarray(page_map), self.cache, self._dpools,
+                jnp.asarray(step, jnp.int32),
+            )
+            self.prefill_calls += 1
+            return np.asarray(first)
 
     def _chunk_call(self, tokens, counts, slot_ids, starts, step,
                     tier: int = 0):
-        first, self.cache, self._dpools = self._chunk2(
-            self.params, self.draft_params, jnp.asarray(tokens),
-            jnp.asarray(counts), jnp.asarray(slot_ids), jnp.asarray(starts),
-            self._device_cache(), self._dpools, jnp.asarray(step, jnp.int32),
-        )
-        self.chunk_calls += 1
-        return np.asarray(first)
+        with self.metrics.measure_program(
+            f"chunk[{tokens.shape[1]}]", tier,
+            traces=lambda: self.chunk_traces,
+        ):
+            first, self.cache, self._dpools = self._chunk2(
+                self.params, self.draft_params, jnp.asarray(tokens),
+                jnp.asarray(counts), jnp.asarray(slot_ids),
+                jnp.asarray(starts), self._device_cache(), self._dpools,
+                jnp.asarray(step, jnp.int32),
+            )
+            self.chunk_calls += 1
+            return np.asarray(first)
 
     def _release(self, slot: int):
         super()._release(slot)
@@ -602,30 +626,37 @@ class SpeculativeEngine(PagedServingEngine):
             if self._parallel:
                 tokens[slot, 1:] = self._guess[slot, : k - 1]
         step_arr = jnp.asarray(self._steps, jnp.int32)
-        if self._parallel:
-            out, guesses, emitted, accepted, self.cache, self._dpools = \
-                self._spec_par(
+        with self.metrics.measure_program(
+            f"spec_decode[k={k}]", self._target_tier,
+            traces=lambda: self.decode_traces,
+        ):
+            if self._parallel:
+                out, guesses, emitted, accepted, self.cache, self._dpools = \
+                    self._spec_par(
+                        self.params, self.draft_params, jnp.asarray(tokens),
+                        self._device_cache(), self._dpools,
+                        jnp.asarray(active), step_arr,
+                    )
+                guess_np = np.asarray(guesses)
+                drafted = max(k - 1, 1)  # k-1 verifiable guesses per window
+            else:
+                out, emitted, accepted, self.cache, self._dpools = self._spec(
                     self.params, self.draft_params, jnp.asarray(tokens),
                     self._device_cache(), self._dpools, jnp.asarray(active),
-                    step_arr,
+                    step_arr, k=k,
                 )
-            guess_np = np.asarray(guesses)
-            drafted = max(k - 1, 1)     # k-1 verifiable guesses per window
-        else:
-            out, emitted, accepted, self.cache, self._dpools = self._spec(
-                self.params, self.draft_params, jnp.asarray(tokens),
-                self._device_cache(), self._dpools, jnp.asarray(active),
-                step_arr, k=k,
-            )
-            guess_np = None
-            drafted = k
-        self.decode_calls += 1
-        out_np = np.asarray(out)                    # ONE host sync per tick
-        emitted_np = np.asarray(emitted)
-        accepted_np = np.asarray(accepted)
+                guess_np = None
+                drafted = k
+            self.decode_calls += 1
+            out_np = np.asarray(out)                # ONE host sync per tick
+            emitted_np = np.asarray(emitted)
+            accepted_np = np.asarray(accepted)
 
         ema_sum = 0.0
         n_active = 0
+        tick_drafted = 0
+        tick_accepted = 0
+        tr = self.tracer
         for slot, req in list(self._active.items()):
             if slot in self._progress:   # drafted nothing this tick
                 continue
@@ -638,8 +669,11 @@ class SpeculativeEngine(PagedServingEngine):
                 else _SLOT_EMA * prev + (1.0 - _SLOT_EMA) * rate
             )
             ema_sum += self._accept_ema[slot]
-            self.drafted_tokens += drafted
-            self.accepted_tokens += int(accepted_np[slot])
+            tick_drafted += drafted
+            tick_accepted += int(accepted_np[slot])
+            if tr is not None:
+                tr.instant(slot, "spec_accept", uid=req.uid, drafted=drafted,
+                           accepted=int(accepted_np[slot]), emitted=m)
             if guess_np is not None:
                 # d_chain[i] predicts position n+i+1; next window starts at
                 # n+m, so its guesses are d_chain[m:]; the tail (positions the
@@ -652,6 +686,9 @@ class SpeculativeEngine(PagedServingEngine):
                     break                           # max_new/eos mid-burst
                 self._record(slot, req, int(out_np[slot, j]), free, done)
         self.spec_ticks += 1
+        if n_active:
+            self.metrics.on_spec_tick(tick_drafted, tick_accepted,
+                                      ema_sum / n_active, self._k)
         if self.controller is not None and n_active:
             # the window integrates the observed PER-SLOT acceptance (EMA per
             # slot, mean over currently-active slots)

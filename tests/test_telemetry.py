@@ -1,0 +1,395 @@
+"""Serving-telemetry tests: the observability PR's invariants.
+
+The load-bearing claim is ZERO COST ON THE DEVICE PATH: greedy token
+streams must be bitwise identical with telemetry (and tracing) on vs off,
+across every engine configuration — paged, chunked prefill, speculative,
+elastic pressure tiers, prefix cache. The rest covers the registry
+primitives (counters / gauges / histograms and their pre-bound fast
+paths), the Chrome-trace export schema, the Prometheus text exposition +
+HTTP endpoint, exactly-once token accounting through eviction/resume
+(satellite: the accounting audit), centralized provenance key identity
+across engines, and the retrace detector.
+
+Each (config, telemetry on/off) engine is built and driven EXACTLY ONCE
+through the module-scoped ``driven`` fixture and every test reads from
+that one run — engines jit their own programs, and pointless re-compiles
+are what pushes a long single-core suite run over the edge.
+"""
+import json
+import urllib.request
+
+import jax
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models import model as model_lib
+from repro.serving.elastic import ModelBank
+from repro.serving.engine import (
+    EngineConfig,
+    PagedServingEngine,
+    ReferenceEngine,
+    ServingEngine,
+)
+from repro.serving.speculative import SpeculativeEngine
+from repro.serving.telemetry import (
+    EngineTelemetry,
+    MetricsRegistry,
+    NullTelemetry,
+    engine_provenance,
+    request_itls,
+    request_ttft,
+    start_metrics_server,
+    validate_prometheus_text,
+)
+from repro.serving.trace import validate_chrome_trace
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_arch("salaad_llama_60m").reduced()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(vocab: int, n: int = 6):
+    """Shared prefix + unique tails: exercises the radix cache when on."""
+    shared = [(7 * i + 3) % (vocab - 2) + 1 for i in range(12)]
+    return [shared + [(i * 5 + j) % (vocab - 2) + 1 for j in range(2 + i % 3)]
+            for i in range(n)]
+
+
+# engine-builder per configuration: (engine class, bank tiers, ecfg kwargs)
+_BASE = dict(max_slots=2, max_len=48, block_size=8, num_blocks=24)
+CONFIGS = {
+    "paged": (PagedServingEngine, 1, dict(_BASE)),
+    "chunked_prefill": (PagedServingEngine, 1,
+                        dict(_BASE, prefill_chunk=8)),
+    "speculative": (SpeculativeEngine, 1, dict(_BASE, spec_k=2)),
+    "elastic_pressure": (PagedServingEngine, 2,
+                         dict(_BASE, num_blocks=16, tier_policy="pressure")),
+    "prefix_cache": (PagedServingEngine, 1,
+                     dict(_BASE, prefill_chunk=8, prefix_cache=True)),
+    # starved page pool + long generations: forces eviction + resume for
+    # the exactly-once accounting audit (same jitted shapes as "paged")
+    "paged_tight": (PagedServingEngine, 1,
+                    dict(_BASE, num_blocks=6)),
+}
+_MAX_NEW = {"paged_tight": 16}
+
+
+def _build(tiny, name: str, telemetry: bool):
+    cfg, params = tiny
+    cls, tiers, kw = CONFIGS[name]
+    keeps = [1.0, 0.5][:tiers] if tiers > 1 else None
+    bank = ModelBank(cfg, [params] * tiers, keeps=keeps)
+    return cls(bank, EngineConfig(telemetry=telemetry, **kw))
+
+
+@pytest.fixture(scope="module")
+def driven(tiny):
+    """Memoized (config, telemetry) -> (engine, streams, done): every engine
+    is constructed, traced (when instrumented), and driven over the shared
+    prompt trace ONCE; tests read the run instead of re-jitting engines."""
+    cfg, _ = tiny
+    cache = {}
+
+    def get(name: str, telemetry: bool):
+        key = (name, telemetry)
+        if key not in cache:
+            eng = _build(tiny, name, telemetry)
+            if telemetry:
+                eng.start_trace()
+            prompts = _prompts(cfg.vocab_size)
+            for p in prompts:
+                eng.submit(list(p),
+                           max_new_tokens=_MAX_NEW.get(name, 6))
+            done = eng.run()
+            assert len(done) == len(prompts)
+            streams = [r.out_tokens
+                       for r in sorted(done, key=lambda r: r.uid)]
+            cache[key] = (eng, streams, done)
+        return cache[key]
+
+    return get
+
+
+# ------------------------------------------------- bitwise on/off identity ---
+
+
+class TestBitwiseInvariance:
+    """Telemetry and tracing are host-side observers: turning them on must
+    not change a single emitted token, in any engine configuration."""
+
+    @pytest.mark.parametrize("name", sorted(CONFIGS))
+    def test_streams_identical_on_off(self, driven, name):
+        eng_off, s_off, _ = driven(name, False)
+        eng_on, s_on, _ = driven(name, True)
+        assert s_off == s_on
+        assert isinstance(eng_off.metrics, NullTelemetry)
+        assert not isinstance(eng_on.metrics, NullTelemetry)
+        # the instrumented run actually recorded something
+        tel = eng_on.metrics
+        assert tel.counter_value(tel.tokens, "emitted") == \
+            sum(len(s) for s in s_on)
+
+    def test_null_telemetry_records_nothing(self, driven):
+        eng, streams, _ = driven("paged", False)
+        tel = eng.metrics
+        assert tel.enabled is False
+        assert sum(len(s) for s in streams) > 0
+        assert tel.counter_value(tel.tokens, "emitted") == 0
+        assert tel.ttft.count(tel.engine) == 0
+        tel.snapshot()                    # still callable, reads empty
+
+
+# ------------------------------------------------------- registry internals ---
+
+
+class TestRegistryPrimitives:
+    def test_counter_monotone_and_incrementer(self):
+        r = MetricsRegistry()
+        c = r.counter("t_total", "x", ("engine",))
+        c.inc(2, "E")
+        inc = c.incrementer("E")
+        inc()
+        inc(3)
+        assert c.value("E") == 6
+        with pytest.raises(ValueError):
+            c.inc(-1, "E")
+
+    def test_histogram_exact_percentiles(self):
+        r = MetricsRegistry()
+        h = r.histogram("h_seconds", "x", ("engine",))
+        for v in (0.010, 0.020, 0.030, 0.040):
+            h.observe(v, "E")
+        assert h.count("E") == 4
+        assert h.sum_("E") == pytest.approx(0.100)
+        assert h.percentile(0, "E") == pytest.approx(0.010)
+        assert h.percentile(100, "E") == pytest.approx(0.040)
+
+    def test_histogram_reset_keeps_bound_observers_live(self):
+        """reset() zeroes IN PLACE so engines' pre-bound observer closures
+        (the per-token fast path) survive a benchmark's warmup reset."""
+        r = MetricsRegistry()
+        h = r.histogram("h_seconds", "x", ("engine",))
+        obs = h.observer("E")
+        obs(0.5)
+        assert h.count("E") == 1
+        h.reset()
+        assert h.count("E") == 0
+        obs(0.25)                          # the old handle must still land
+        assert h.count("E") == 1
+        assert h.percentile(50, "E") == pytest.approx(0.25)
+
+    def test_gauge_setter(self):
+        r = MetricsRegistry()
+        g = r.gauge("g", "x", ("engine",))
+        set_ = g.setter("E")
+        set_(3)
+        assert g.value("E") == 3.0
+
+    def test_duplicate_declaration_rejected(self):
+        r = MetricsRegistry()
+        r.counter("c_total", "x", ("engine",))
+        with pytest.raises(ValueError):
+            r.gauge("c_total", "x", ("engine",))
+
+
+# ---------------------------------------------------------- retrace detector ---
+
+
+class TestRetraceDetector:
+    def test_first_compile_then_steady_then_retrace(self):
+        tel = EngineTelemetry("T")
+        n = {"traces": 0}
+
+        def bump():
+            with tel.measure_program("p", 0, traces=lambda: n["traces"]):
+                n["traces"] += 1
+
+        def steady():
+            with tel.measure_program("p", 0, traces=lambda: n["traces"]):
+                pass
+
+        bump()                             # first use: compile, NOT a retrace
+        assert tel.counter_value(tel.jit_compiles, "p", "0") == 1
+        assert tel.retraces() == 0
+        steady()                           # warm call
+        assert tel.retraces() == 0
+        bump()                             # seen program compiles again
+        assert tel.counter_value(tel.jit_retraces, "p", "0") == 1
+        assert tel.retraces() == 1
+
+    def test_tiers_tracked_independently(self):
+        tel = EngineTelemetry("T")
+        n = {"traces": 0}
+        for tier in (0, 1):
+            with tel.measure_program("p", tier, traces=lambda: n["traces"]):
+                n["traces"] += 1
+        assert tel.retraces() == 0         # tier 1's first compile is not a
+        #                                    retrace of tier 0's program
+
+    def test_engine_steady_state_has_no_retraces(self, tiny, driven):
+        cfg, _ = tiny
+        eng, _, _ = driven("chunked_prefill", True)
+        # a SECOND full drive on the warm engine: every program re-runs,
+        # nothing may recompile
+        for p in _prompts(cfg.vocab_size):
+            eng.submit(list(p), max_new_tokens=6)
+        eng.run()
+        snap = eng.stats_snapshot()
+        assert snap["jit_retraces"] == 0
+        assert snap["steps"] > 0
+
+
+# ------------------------------------------------- exactly-once accounting ---
+
+
+class TestTokenAccounting:
+    """Satellite: each emitted token is counted exactly once — eviction,
+    resume re-prefill, and prefix-cache hits must not double-count."""
+
+    def _audit(self, eng, done):
+        tel = eng.metrics
+        emitted = sum(len(r.out_tokens) for r in done)
+        assert tel.counter_value(tel.tokens, "emitted") == emitted
+        for r in done:
+            assert len(r.token_times) == len(r.out_tokens)
+        # TTFT + ITLs partition the token timeline per request
+        assert tel.ttft.count(tel.engine) == len(done)
+        assert tel.itl.count(tel.engine) == emitted - len(done)
+
+    def test_eviction_resume_counts_once(self, driven):
+        # paged_tight starves the pool: admission pressure forces eviction
+        eng, _, done = driven("paged_tight", True)
+        self._audit(eng, done)
+        tel = eng.metrics
+        assert eng.evictions > 0
+        # resumed work re-prefills, but re-prefill is compute accounting —
+        # the emitted count stays exactly-once
+        assert tel.counter_value(tel.tokens, "reprefill") > 0
+        assert tel.counter_value(tel.tokens, "prefill_compute") >= \
+            tel.counter_value(tel.tokens, "reprefill")
+
+    def test_prefix_hits_split_from_compute(self, tiny, driven):
+        cfg, _ = tiny
+        eng, _, done = driven("prefix_cache", True)
+        self._audit(eng, done)
+        tel = eng.metrics
+        assert eng.prefix_hits > 0
+        hit = tel.counter_value(tel.tokens, "prefix_hit")
+        compute = tel.counter_value(tel.tokens, "prefill_compute")
+        total_prompt = sum(len(p) for p in _prompts(cfg.vocab_size))
+        assert hit > 0
+        # every prompt token is either prefix-hit or prefilled, never both
+        assert hit + compute == total_prompt
+
+    def test_latency_helpers_are_canonical(self, driven):
+        _, _, done = driven("paged", True)
+        for r in done:
+            assert request_ttft(r) >= 0
+            gaps = request_itls(r)
+            assert len(gaps) == len(r.out_tokens) - 1
+            assert all(g >= 0 for g in gaps)
+
+
+# ----------------------------------------------------------- chrome traces ---
+
+
+class TestChromeTrace:
+    def test_roundtrip_schema(self, driven, tmp_path):
+        eng, _, _ = driven("chunked_prefill", True)
+        path = tmp_path / "trace.json"
+        eng.tracer.save_chrome(path)
+        doc = json.loads(path.read_text())
+        rep = validate_chrome_trace(doc)
+        assert rep["events"] > 0
+        assert rep["tracks"] >= 2          # slot tracks + program tracks
+        for ev in doc["traceEvents"]:
+            assert ev["ph"] in ("X", "i", "M")
+            assert "pid" in ev and "tid" in ev and "name" in ev
+            if ev["ph"] == "X":
+                assert ev["dur"] >= 0 and ev["ts"] >= 0
+
+    def test_jsonl_event_log(self, driven, tmp_path):
+        eng, _, _ = driven("paged", True)
+        path = tmp_path / "events.jsonl"
+        eng.tracer.save_jsonl(path)
+        lines = path.read_text().splitlines()
+        assert lines
+        for ln in lines:
+            ev = json.loads(ln)
+            assert "name" in ev and "kind" in ev
+
+    def test_validator_rejects_unbalanced(self):
+        with pytest.raises(ValueError):
+            validate_chrome_trace({"traceEvents": [
+                {"ph": "B", "ts": 0, "pid": 1, "tid": 1, "name": "x"},
+            ]})
+
+
+# ------------------------------------------------------------- prometheus ---
+
+
+class TestPrometheus:
+    def test_text_exposition_valid(self, driven):
+        eng, _, _ = driven("paged", True)
+        text = eng.metrics.registry.prometheus_text()
+        rep = validate_prometheus_text(text)
+        assert rep["families"] > 10
+        assert "serve_tokens_total" in text
+        assert "serve_ttft_seconds_bucket" in text
+
+    def test_http_endpoint(self, driven):
+        eng, _, _ = driven("paged", True)
+        server = start_metrics_server(eng.metrics.registry, port=0)
+        try:
+            port = server.server_address[1]
+            with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics"
+            ) as resp:
+                assert resp.status == 200
+                body = resp.read().decode()
+            validate_prometheus_text(body)
+            assert "serve_tokens_total" in body
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(f"http://127.0.0.1:{port}/nope")
+        finally:
+            server.shutdown()
+
+
+# -------------------------------------------------------------- provenance ---
+
+
+class TestProvenance:
+    """Satellite: BENCH payload provenance is generated centrally, so every
+    engine's payload carries IDENTICAL keys."""
+
+    def test_keys_identical_across_engines(self, tiny):
+        cfg, params = tiny
+        bank = ModelBank.single(cfg, params)
+        # construction only — provenance never runs the model, so these
+        # engines jit nothing
+        engines = [
+            ServingEngine(bank, EngineConfig(max_slots=1, max_len=16)),
+            PagedServingEngine(bank, EngineConfig(max_slots=1, max_len=16,
+                                                  block_size=8)),
+            ReferenceEngine(bank, EngineConfig(max_slots=1, max_len=16)),
+            SpeculativeEngine(bank, EngineConfig(max_slots=1, max_len=16,
+                                                 block_size=8, spec_k=2)),
+        ]
+        provs = [engine_provenance(e) for e in engines]
+        keysets = [frozenset(p) for p in provs]
+        assert len(set(keysets)) == 1, keysets
+        cfg_keys = [frozenset(p["config"]) for p in provs]
+        assert len(set(cfg_keys)) == 1
+        for p in provs:
+            json.dumps(p)                  # serializable by contract
+
+    def test_stats_snapshot_schema(self, driven):
+        eng, _, _ = driven("paged", True)
+        snap = eng.stats_snapshot()
+        for key in ("engine", "steps", "jit_retraces", "metrics"):
+            assert key in snap, key
+        assert snap["engine"] == "PagedServingEngine"
+        assert "serve_tokens_total" in snap["metrics"]
