@@ -1,11 +1,18 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-latency bench-prefill bench-prefix bench-spec bench-elastic bench-fused bench-obs serve-demo
+.PHONY: test test-sharded bench-smoke bench bench-latency bench-prefill bench-prefix bench-spec bench-elastic bench-fused bench-obs bench-shard serve-demo
 
 # tier-1 verify (ROADMAP.md)
 test:
 	$(PYTHON) -m pytest -x -q
+
+# tensor-parallel parity matrix on 8 forced host devices (the env var must
+# be set before the first jax import, so it lives on the pytest invocation,
+# not inside the test module)
+test-sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	    $(PYTHON) -m pytest tests/test_sharded_serving.py -q
 
 # quick serving-throughput benchmark (interpret-mode kernels on CPU)
 bench-smoke:
@@ -45,6 +52,11 @@ bench-fused:
 # against realistic per-tick device work for the percentage to mean much
 bench-obs:
 	$(PYTHON) -m benchmarks.serve_obs
+
+# tensor-parallel serving: tok/s + per-device KV pool bytes at mesh 1/2/4
+# under an equal total KV budget (the script forces 8 host devices itself)
+bench-shard:
+	$(PYTHON) -m benchmarks.serve_shard --quick
 
 # full scaled-down paper benchmark suite
 bench:

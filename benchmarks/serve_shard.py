@@ -1,0 +1,121 @@
+"""Tensor-parallel serving: tokens/sec and per-device KV residency vs mesh size.
+
+Drives the paged engine over the SAME request trace and the SAME total KV
+budget (``num_blocks`` is held constant) at mesh sizes 1 / 2 / 4, and emits
+``BENCH_shard.json``: tokens/sec plus the per-device KV pool bytes, which
+must shrink ~1/N with the model-axis size — the whole point of sharding the
+pools is that each device hosts 1/N of the pages, so an N-way mesh serves an
+N-x KV budget at constant per-device HBM.
+
+On forced-host-device CPU the tok/s column is NOT a speedup claim (8 virtual
+devices share one socket; collectives are memcpys) — it documents that the
+sharded program stays in the same performance regime. The residency column is
+exact on any backend.
+
+XLA_FLAGS is forced to 8 host devices at module import (must precede the
+first jax import), mirroring ``launch/dryrun.py``:
+
+  PYTHONPATH=src python -m benchmarks.serve_shard --quick
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+from dataclasses import replace
+from pathlib import Path
+
+from repro.serving.elastic import ModelBank
+from repro.serving.engine import (
+    EngineConfig,
+    PagedServingEngine,
+    _kv_pool_device_bytes,
+)
+
+from .common import bench_arch, emit, engine_provenance, salaad_cfg, train_salaad
+
+# None = single-device baseline; the reduced arch is widened to 4 KV heads
+# below so model=4 divides the head axis
+MESHES = (None, "model=2", "model=4")
+
+
+def _drive(engine, requests: int, max_new: int) -> float:
+    """Submit a fixed trace, run to completion, return tokens/sec."""
+    for i in range(requests):
+        engine.submit([1 + (i % 7), 2, 3, 4], max_new_tokens=max_new)
+    t0 = time.perf_counter()
+    done = engine.run()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out_tokens) for r in done)
+    assert len(done) == requests, (len(done), requests)
+    return tokens / max(dt, 1e-9)
+
+
+def run(
+    steps: int = 30,
+    requests: int = 8,
+    max_new: int = 16,
+    max_slots: int = 4,
+    num_blocks: int = 32,
+) -> list[dict]:
+    cfg = replace(bench_arch(), num_heads=4, num_kv_heads=4)
+    tr, state = train_salaad(cfg, steps=steps, scfg=salaad_cfg())
+    bank = ModelBank.build(cfg, state.params, state.slr, tr.blocks,
+                           budgets=(1.0,), fmt="factored")
+
+    rows = []
+    base_tokens = None
+    for mesh in MESHES:
+        ecfg = EngineConfig(max_slots=max_slots, max_len=64, block_size=8,
+                            num_blocks=num_blocks, mesh=mesh)
+        eng = PagedServingEngine(bank, ecfg)
+        _drive(eng, max(requests // 2, 2), max_new)   # warmup: compile
+        tok_s = _drive(eng, requests, max_new)
+        per_dev = _kv_pool_device_bytes(eng.cache)
+        sizes = sorted(set(per_dev.values()))
+        assert len(sizes) == 1, f"unbalanced KV pool: {per_dev}"
+        row = {
+            "mesh": mesh,
+            "model_axis": eng.mesh.model_size if eng.mesh is not None else 1,
+            "tok_per_s": round(tok_s, 1),
+            "kv_pool_device_bytes": sizes[0],
+            "kv_pool_total_bytes": sum(per_dev.values()),
+            "num_devices": len(per_dev),
+            "jit_retraces": eng.stats_snapshot()["jit_retraces"],
+            "provenance": engine_provenance(eng),
+        }
+        if base_tokens is None:
+            base_tokens = row["kv_pool_device_bytes"]
+        # equal total budget across meshes -> residency shrinks exactly 1/N
+        assert row["kv_pool_device_bytes"] * row["model_axis"] == base_tokens, row
+        assert row["jit_retraces"] == 0, row
+        rows.append(row)
+    return rows
+
+
+def main(steps: int = 30, out: str = "BENCH_shard.json", **kw):
+    rows = run(steps=steps, **kw)
+    Path(out).write_text(json.dumps(rows, indent=2))
+    for r in rows:
+        emit(
+            f"serve_shard/mesh={r['mesh'] or 'none'}", 0.0,
+            f"tok_s={r['tok_per_s']};dev_bytes={r['kv_pool_device_bytes']};"
+            f"devices={r['num_devices']}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_shard.json")
+    a = ap.parse_args()
+    main(steps=10 if a.quick else 30, out=a.out,
+         requests=4 if a.quick else 8, max_new=8 if a.quick else 16)

@@ -134,11 +134,51 @@ def flash_attention(q, k, v, causal=True, interpret: bool | None = None, **kw):
     )
 
 
+def _head_shard_mesh(num_q_heads: int, num_kv_heads: int):
+    """The active mesh, iff paged attention should shard_map over heads.
+
+    The Pallas paged kernels use scalar-prefetched DMA index maps, which GSPMD
+    cannot partition — so under an active mesh with model > 1 the dispatchers
+    below wrap them in ``shard_map`` over the KV-head axis. Per-(batch, head)
+    attention is independent, and GQA groups stay co-located (hq/m q heads +
+    hkv/m kv heads per rank), so the body needs NO collective; the psum
+    happens later at the row-parallel o-projection, exactly as for dense TP.
+    """
+    from ..parallel.sharding import current_mesh
+
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    m = int(mesh.shape["model"])
+    if m <= 1 or num_q_heads % m or num_kv_heads % m:
+        return None
+    return mesh
+
+
 def paged_attention(q, k_pages, v_pages, block_table, lengths,
                     interpret: bool | None = None):
+    interp = _auto_interpret() if interpret is None else interpret
+    mesh = _head_shard_mesh(q.shape[1], k_pages.shape[1])
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        fn = shard_map(
+            functools.partial(paged_attention_pallas, interpret=interp),
+            mesh=mesh,
+            in_specs=(
+                P(None, "model", None),        # q: (B, Hq, D) heads sharded
+                P(None, "model", None, None),  # k pool: (pages, Hkv, bs, D)
+                P(None, "model", None, None),  # v pool
+                P(),                           # block table: host bookkeeping
+                P(),                           # lengths
+            ),
+            out_specs=P(None, "model", None),
+            check_rep=False,
+        )
+        return fn(q, k_pages, v_pages, block_table, lengths)
     return paged_attention_pallas(
-        q, k_pages, v_pages, block_table, lengths,
-        interpret=_auto_interpret() if interpret is None else interpret,
+        q, k_pages, v_pages, block_table, lengths, interpret=interp,
     )
 
 
@@ -148,10 +188,30 @@ def paged_attention_kquery(q, k_pages, v_pages, block_table, lengths,
     """Multi-query paged attention: the speculative-verify window (kq = draft
     k) and chunked-prefill chunks (kq = prefill_chunk) share this kernel —
     wide windows tile the query axis across the grid (``q_tile``)."""
+    interp = _auto_interpret() if interpret is None else interpret
+    mesh = _head_shard_mesh(q.shape[1], k_pages.shape[1])
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        fn = shard_map(
+            functools.partial(
+                paged_attention_kquery_pallas, interpret=interp, q_tile=q_tile
+            ),
+            mesh=mesh,
+            in_specs=(
+                P(None, "model", None, None),  # q: (B, Hq, kq, D)
+                P(None, "model", None, None),
+                P(None, "model", None, None),
+                P(),
+                P(),
+            ),
+            out_specs=P(None, "model", None, None),
+            check_rep=False,
+        )
+        return fn(q, k_pages, v_pages, block_table, lengths)
     return paged_attention_kquery_pallas(
-        q, k_pages, v_pages, block_table, lengths,
-        interpret=_auto_interpret() if interpret is None else interpret,
-        q_tile=q_tile,
+        q, k_pages, v_pages, block_table, lengths, interpret=interp, q_tile=q_tile,
     )
 
 

@@ -34,7 +34,12 @@ from repro.core.selection import SelectionConfig, select_blocks  # noqa: E402
 from repro.launch.mesh import make_production_mesh               # noqa: E402
 from repro.models import model                                   # noqa: E402
 from repro.optim.adam import AdamConfig                          # noqa: E402
-from repro.parallel.sharding import param_sharding_tree          # noqa: E402
+from repro.parallel.sharding import (                            # noqa: E402
+    batch_shardings,
+    dp_axes,
+    dp_size as _dp_size,
+    param_sharding_tree,
+)
 from repro.train.state import abstract_train_state               # noqa: E402
 from repro.train.steps import make_decode_step, make_prefill_step, make_train_step  # noqa: E402
 
@@ -45,23 +50,8 @@ HBM_BW = 819e9           # bytes/s
 ICI_BW = 50e9            # bytes/s/link
 
 
-def dp_axes(mesh):
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
-
-
-def _dp_size(mesh):
-    return int(np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names]))
-
-
-def batch_shardings(specs: dict, mesh) -> dict:
-    dp = dp_axes(mesh)
-    dpn = _dp_size(mesh)
-    out = {}
-    for k, v in specs.items():
-        ax0 = dp if v.shape[0] % dpn == 0 else None
-        rest = (None,) * (len(v.shape) - 1)
-        out[k] = NamedSharding(mesh, P(ax0, *rest))
-    return out
+# dp_axes / _dp_size / batch_shardings moved to repro.parallel.sharding —
+# one axis-naming authority shared with ServingMesh and the serving engines.
 
 
 def cache_shardings(cache_abstract, mesh):

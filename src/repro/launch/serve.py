@@ -254,6 +254,12 @@ def main():
     ap.add_argument("--metrics-out", default=None,
                     help="persist one Prometheus scrape to this file after "
                          "the run (over HTTP when --metrics-port is set)")
+    ap.add_argument("--mesh", default=None,
+                    help="tensor-parallel serving mesh spec, e.g. "
+                         "'model=2,data=1': weights and KV pools shard the "
+                         "head/ffn dims over 'model' (must divide the head "
+                         "counts); on CPU force devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -300,6 +306,7 @@ def main():
         prefix_min_hit_pages=args.prefix_min_hit,
         tier_policy=args.tier_policy,
         spec_k=spec_k, spec_adaptive=args.spec_adaptive,
+        mesh=args.mesh,
     )
 
     if args.keep_ratios is None:

@@ -81,6 +81,7 @@ as a single-tier bank and emits a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import logging
 import time
@@ -93,6 +94,7 @@ import numpy as np
 
 from ..models import model as model_lib
 from ..models import transformer as transformer_lib
+from ..parallel.sharding import ServingMesh, parse_mesh_spec
 from .deployed import DeployedModel
 from .elastic import ModelBank, TierController, TierControllerConfig
 from .prefix_cache import PrefixCache
@@ -221,6 +223,11 @@ class EngineConfig:
     #                                 a no-op (NullTelemetry)
     trace: bool = False             # per-request span tracer (Chrome-trace /
     #                                 JSONL export via engine.tracer)
+    # tensor-parallel serving (parallel/sharding.ServingMesh): a mesh spec
+    # string like "model=2,data=1". Kept as a STRING so EngineConfig stays
+    # dataclasses.asdict / JSON-safe (engine_provenance) and never touches
+    # jax device state at construction; the engine builds the ServingMesh.
+    mesh: str | None = None
 
     def __post_init__(self):
         """Validate at CONSTRUCTION: a bad config used to surface as a
@@ -291,6 +298,16 @@ class EngineConfig:
                 f"unknown spec_draft_kv_dtype {self.spec_draft_kv_dtype!r}; "
                 f"expected one of {sorted(_KV_DTYPES) + ['int8']}"
             )
+        if self.mesh is not None:
+            if not isinstance(self.mesh, str):
+                raise ValueError(
+                    f"mesh={self.mesh!r} must be a spec string like "
+                    f"'model=2,data=1' (or None for single-device)"
+                )
+            # format-only validation (raises field-naming ValueErrors);
+            # device-count and head-divisibility checks need the arch + real
+            # devices and happen in the engine constructor
+            parse_mesh_spec(self.mesh)
 
 
 def decode_emitted_tokens(done: list[Request]) -> int:
@@ -382,6 +399,83 @@ def _capability_error(engine_cls, family: str, missing: list[str]):
     )
 
 
+def _resolve_serving_mesh(ecfg: EngineConfig, arch_cfg, bank: ModelBank):
+    """Build + validate the ServingMesh for ``ecfg.mesh`` (None = unsharded).
+
+    Every check raises a ValueError naming the field and the constraint:
+    the 'model' axis must divide both head counts (the KV pools and the
+    shard_map'd paged kernels split the head axis), and the Pallas BSR /
+    fused formats are rejected — their block-CSR tables are addressed by a
+    global block grid that the scalar-prefetched DMA index maps walk, which
+    no axis partition can split.
+    """
+    if ecfg.mesh is None:
+        return None
+    smesh = ServingMesh.from_spec(ecfg.mesh)
+    m = smesh.model_size
+    if m > 1:
+        heads = arch_cfg.num_heads
+        kv_heads = arch_cfg.num_kv_heads or heads
+        for fname, h in (("num_heads", heads), ("num_kv_heads", kv_heads)):
+            if not h or h % m:
+                raise ValueError(
+                    f"mesh={ecfg.mesh!r}: model axis size {m} must divide "
+                    f"{fname}={h} (KV pools and paged attention shard the "
+                    f"head axis)"
+                )
+        for tier in bank:
+            fmt = getattr(tier.model, "fmt", "dense")
+            if fmt in ("bsr", "fused"):
+                raise ValueError(
+                    f"mesh={ecfg.mesh!r}: deployment format {fmt!r} cannot "
+                    f"shard over the model axis (its BSR block grid is "
+                    f"indexed globally by the Pallas DMA index maps); serve "
+                    f"'dense' or 'factored' tiers under a mesh"
+                )
+    return smesh
+
+
+def _device_put_tiers(tier_params: list, smesh: ServingMesh) -> list:
+    """Materialize every bank tier against ONE sharded base.
+
+    Leaves shared across tiers by object identity (the bank's shared dense
+    base: embeddings, norms, unselected matrices) are device_put ONCE and the
+    same placed array is re-used in every tier's tree — so elastic banks keep
+    one physical copy per device and ``ModelBank.shared_base_bytes`` (an
+    ``id()`` intersection) still reports the sharing.
+    """
+    placed: dict[int, jax.Array] = {}
+    out = []
+    for tree in tier_params:
+        shardings = smesh.params_shardings(tree)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        shard_leaves = jax.tree_util.tree_leaves(shardings)
+        assert len(leaves) == len(shard_leaves)
+        new = []
+        for leaf, sh in zip(leaves, shard_leaves):
+            key = id(leaf)
+            if key not in placed:
+                placed[key] = jax.device_put(leaf, sh)
+            new.append(placed[key])
+        out.append(jax.tree_util.tree_unflatten(treedef, new))
+    return out
+
+
+def _kv_pool_device_bytes(cache) -> dict[str, int]:
+    """Per-device KV payload bytes, from the placed pools' actual shards —
+    the number behind the ``serve_kv_pool_device_bytes`` gauge and
+    BENCH_shard.json's 1/N-scaling check."""
+    per_dev: dict[str, int] = {}
+    for leaf in jax.tree_util.tree_leaves(cache):
+        if getattr(leaf, "ndim", 0) != 5:  # payload/scale pools only
+            continue
+        for shard in leaf.addressable_shards:
+            key = str(shard.device)
+            per_dev[key] = per_dev.get(key, 0) + int(np.prod(shard.data.shape)) \
+                * leaf.dtype.itemsize
+    return per_dev
+
+
 class ServingEngine:
     """Single-host batched slot-padded engine; the multi-pod path swaps the
     jitted fns for their pjit'd versions (same signatures — launch/serve.py)."""
@@ -407,6 +501,7 @@ class ServingEngine:
         self.cache = cache._replace(
             length=jnp.zeros((ecfg.max_slots,), jnp.int32)
         )
+        self._place_cache()
         self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(4,))
 
@@ -430,6 +525,7 @@ class ServingEngine:
                 "elastic_tiers": True,
                 "tier_pressure_controller": False,
                 "prefix_caching": False,
+                "tensor_parallel": True,
             },
         }
 
@@ -474,6 +570,12 @@ class ServingEngine:
         self.ecfg = ecfg
         self.bank = bank
         self._tier_params, self._default_tier = _bank_tier_state(bank, ecfg)
+        # tensor parallelism: resolve the mesh spec, then materialize ALL
+        # tiers against one sharded base (shared leaves placed once) so
+        # elastic / speculative / prefix-cached serving inherit TP for free
+        self.mesh = _resolve_serving_mesh(ecfg, arch_cfg, bank)
+        if self.mesh is not None:
+            self._tier_params = _device_put_tiers(self._tier_params, self.mesh)
         # back-compat alias: the default tier's tree (the speculative engine
         # re-points it at the verify target's tier)
         self.params = self._tier_params[self._default_tier]
@@ -805,6 +907,23 @@ class ServingEngine:
         """Hook: the paged engine pushes host block-table updates here."""
         return self.cache
 
+    def _place_cache(self):
+        """Shard the KV cache over the mesh (head axis over 'model'; block
+        tables / lengths replicated) and record the per-device pool bytes
+        gauge. No-op without a mesh — single-device arrays stay as-is."""
+        if self.mesh is not None:
+            self.cache = jax.device_put(
+                self.cache, self.mesh.cache_shardings(self.cache)
+            )
+        if self.metrics.enabled:
+            self.metrics.set_pool_device_bytes(_kv_pool_device_bytes(self.cache))
+
+    def _mesh_scope(self):
+        """The mesh context for one tick: activates the ServingMesh so
+        ``parallel.sharding.constrain`` and the shard_map-wrapped paged
+        kernels see it at trace time; a null context when unsharded."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
     def step(self) -> list[Request]:
         """ONE engine tick: admit whatever fits, refresh effective tiers
         (pressure controller first — downshift precedes any eviction),
@@ -812,7 +931,8 @@ class ServingEngine:
         per active tier over the decode-phase slots. Returns requests that
         finished this tick."""
         with self.metrics.measure_tick():
-            done = self._step_inner()
+            with self._mesh_scope():
+                done = self._step_inner()
             self._update_gauges()
         return done
 
@@ -1078,6 +1198,7 @@ class PagedServingEngine(ServingEngine):
                     gain=ecfg.tier_gain, ema=ecfg.tier_ema,
                 ),
             )
+        self._place_cache()
         self._decode = jax.jit(self._decode_fn, donate_argnums=(2,))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(5,))
         self._chunk_prog = jax.jit(self._chunk_fn, donate_argnums=(5,))
@@ -1660,7 +1781,15 @@ class PagedServingEngine(ServingEngine):
 
     def _device_cache(self):
         if self._table_dirty:
-            self.cache = self.cache._replace(block_table=jnp.asarray(self._table))
+            # under a mesh the host table is pushed with an explicit
+            # replicated placement — block ids are head-replicated, and a
+            # committed single-device array would reshard (and retrace) the
+            # decode program
+            table = (
+                jax.device_put(self._table, self.mesh.replicated())
+                if self.mesh is not None else jnp.asarray(self._table)
+            )
+            self.cache = self.cache._replace(block_table=table)
             self._table_dirty = False
         if self._len_reset:
             # pending hit-admission length resets (see _admit): applied before
@@ -1714,6 +1843,11 @@ class ReferenceEngine:
             )
         if ecfg.prefix_cache:
             missing.append("prefix_cache=True (radix prompt cache)")
+        if ecfg.mesh is not None:
+            missing.append(
+                f"mesh={ecfg.mesh!r} (tensor-parallel serving needs the "
+                "batched engines)"
+            )
         if missing:
             raise _capability_error(type(self), arch_cfg.family, missing)
         log.info(
@@ -1768,6 +1902,7 @@ class ReferenceEngine:
                 "elastic_tiers": True,
                 "tier_pressure_controller": False,
                 "prefix_caching": False,
+                "tensor_parallel": False,
             },
         }
 

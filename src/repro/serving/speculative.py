@@ -329,7 +329,12 @@ class SpeculativeEngine(PagedServingEngine):
         )
         # draft pools share the target's block table + lengths; only the
         # payload (and scale) pools persist host-side between ticks
-        self._dpools = (dcache.k, dcache.v, dcache.k_scale, dcache.v_scale)
+        dpools = (dcache.k, dcache.v, dcache.k_scale, dcache.v_scale)
+        if self.mesh is not None:
+            # draft pools shard the head axis over 'model' exactly like the
+            # target's pools (same block ids, head-replicated bookkeeping)
+            dpools = jax.device_put(dpools, self.mesh.cache_shardings(dpools))
+        self._dpools = dpools
 
         self._k = ecfg.spec_k
         self._write_window = self._k          # _pre_decode covers k positions

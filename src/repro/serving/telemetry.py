@@ -519,6 +519,11 @@ class EngineTelemetry:
             "Mean per-slot EMA acceptance rate over active slots", e)
         self.spec_k = r.gauge(
             "serve_spec_k", "Current draft window (adaptive k)", e)
+        self.kv_pool_device_bytes = r.gauge(
+            "serve_kv_pool_device_bytes",
+            "KV payload bytes resident per device (pools + int8 scales); "
+            "under a ServingMesh each device holds its head-axis shard, so "
+            "this shrinks ~1/N with the model-axis size", e + ("device",))
         # (program, tier) pairs whose first call already happened: a compile
         # observed later is a RETRACE (the generalized retraces_on_switch)
         self._seen_programs: set[tuple[str, str]] = set()
@@ -616,6 +621,13 @@ class EngineTelemetry:
         if shift is not None:
             self._set_shift(shift)
 
+    def set_pool_device_bytes(self, bytes_by_device: dict):
+        """Per-device KV pool residency (label: device). Called once at cache
+        placement — pool shapes and shardings are static for an engine's
+        lifetime, so this is NOT a per-tick hook."""
+        for device, nbytes in sorted(bytes_by_device.items()):
+            self.kv_pool_device_bytes.set(nbytes, self.engine, device)
+
     @contextmanager
     def measure_tick(self):
         t0 = time.monotonic()
@@ -712,6 +724,9 @@ class NullTelemetry(EngineTelemetry):
                  shift=None):
         pass
 
+    def set_pool_device_bytes(self, bytes_by_device):
+        pass
+
     @contextmanager
     def measure_tick(self):
         yield
@@ -748,10 +763,14 @@ def engine_provenance(engine) -> dict:
     every benchmark's payload carries IDENTICAL keys and a new config field
     or counter appears everywhere at once instead of per-script."""
     ecfg = engine.ecfg
+    mesh = getattr(engine, "mesh", None)
     out = {
         "engine": type(engine).__name__,
         "config": asdict(ecfg),
         "num_blocks": getattr(engine, "num_blocks", None),
+        # device topology: BENCH_*.json from sharded and unsharded runs must
+        # be distinguishable (None = single-device / no ServingMesh)
+        "mesh": mesh.describe() if mesh is not None else None,
     }
     bank = getattr(engine, "bank", None)
     if bank is not None:
