@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-sharded bench-smoke bench bench-latency bench-prefill bench-prefix bench-spec bench-elastic bench-fused bench-obs bench-shard serve-demo
+.PHONY: test test-sharded bench-smoke bench bench-latency bench-prefill bench-prefix bench-spec bench-elastic bench-fused bench-obs bench-shard bench-adapters serve-demo serve-adapters-demo
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -58,6 +58,11 @@ bench-obs:
 bench-shard:
 	$(PYTHON) -m benchmarks.serve_shard --quick
 
+# multi-tenant adapters: one AdapterBank engine (batched heterogeneous-
+# adapter kernel) vs a per-tenant engine fleet at equal aggregate KV budget
+bench-adapters:
+	$(PYTHON) -m benchmarks.serve_adapters --quick
+
 # full scaled-down paper benchmark suite
 bench:
 	$(PYTHON) -m benchmarks.run --quick
@@ -67,3 +72,9 @@ serve-demo:
 	$(PYTHON) -m repro.launch.serve --arch salaad_llama_60m --reduced \
 	    --keep-ratios 1.0,0.6,0.3 --fmt factored --requests 8 \
 	    --tier-policy pressure
+
+# multi-tenant spectrum: ONE engine serving 8 registered adapters over a
+# shared base, with a 4-row device pool exercising LRU swaps
+serve-adapters-demo:
+	$(PYTHON) -m repro.launch.serve --arch salaad_llama_60m --reduced \
+	    --fmt fused --adapters 8 --max-resident-adapters 4 --requests 16

@@ -1,0 +1,232 @@
+"""Multi-tenant adapter serving: one AdapterBank engine vs a per-tenant fleet.
+
+Trains the reduced 60m config with the real SALAAD trainer, materializes N
+tenant adapters (HPA views at spread keep budgets, each ``adapterize``-d onto
+ONE shared fused-format base), and drives the SAME mixed-tenant Poisson
+trace through two deployments at EQUAL aggregate KV budget:
+
+1. **multi_tenant** — one ``PagedServingEngine`` over an ``AdapterBank``:
+   every decode tick batches slots running DIFFERENT adapters through one
+   ``slr_matmul_multi`` call (the adapter gather rides the kernel's
+   scalar-prefetched index maps), so tenant diversity costs no batch
+   occupancy. The whole trace shares one ``num_blocks`` page pool.
+2. **per_tenant_fleet** — the status quo: one single-tenant engine per
+   adapter, each with ``1/N`` of the slots and ``1/N`` of the page pool
+   (equal aggregate HBM), round-robin ticked on the same host. Each tenant's
+   requests can only batch with themselves, so the fleet decodes at ~batch-1
+   per engine while the multi-tenant engine decodes at full occupancy.
+
+Reported per arm: aggregate tok/s, p50/p99 TTFT (scheduled-arrival basis via
+backdated ``submitted_at``), decode batch occupancy, and for the bank arm
+the adapter-pool report (residency, swaps) and the zero-retrace check across
+adapter switches. Results → ``BENCH_adapters.json``.
+
+  PYTHONPATH=src python -m benchmarks.serve_adapters --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.hpa import hpa_keep_ratio
+from repro.serving.adapters import AdapterBank, adapterize
+from repro.serving.deployed import DeployedModel
+from repro.serving.elastic import ModelBank
+from repro.serving.engine import (
+    EngineConfig,
+    PagedServingEngine,
+    decode_emitted_tokens,
+)
+from repro.serving.telemetry import request_ttft
+
+from .common import bench_arch, emit, engine_provenance, salaad_cfg, train_salaad
+
+
+def build_trace(n: int, rate_hz: float, vocab: int, max_new: int,
+                n_adapters: int, seed: int):
+    """Poisson arrivals with a uniform tenant mix:
+    [(arrival_offset_s, prompt, adapter_id, max_new), ...]."""
+    rng = np.random.RandomState(seed)
+    offsets = np.cumsum(rng.exponential(1.0 / rate_hz, size=n))
+    return [
+        (float(offsets[i]),
+         rng.randint(0, vocab, size=rng.randint(4, 8)).tolist(),
+         int(rng.randint(0, n_adapters)),
+         max_new)
+        for i in range(n)
+    ]
+
+
+def build_tenants(cfg, state, blocks, n: int, kappa: float = 0.7):
+    """One shared fused base + n adapter views at spread HPA budgets."""
+    slr_c, _ = hpa_keep_ratio(state.slr, blocks, 1.0, kappa)
+    base = DeployedModel.build(cfg, state.params, slr_c, blocks, fmt="fused",
+                               bsr_block=32)
+    tenants = []
+    for keep in np.linspace(1.0, 0.4, n):
+        slr_k, _ = hpa_keep_ratio(state.slr, blocks, float(keep), kappa)
+        tenants.append(adapterize(base, DeployedModel.build(
+            cfg, state.params, slr_k, blocks, fmt="fused", bsr_block=32)))
+    return base, tenants
+
+
+def _row(done, dt: float, decode_calls: int) -> dict:
+    tokens = sum(len(r.out_tokens) for r in done)
+    ttft = [request_ttft(r) * 1e3 for r in done if r.first_token_at]
+    return {
+        "requests": len(done),
+        "tokens": tokens,
+        "wall_s": round(dt, 3),
+        "tok_per_s": round(tokens / max(dt, 1e-9), 1),
+        "ttft_p50_ms": round(float(np.percentile(ttft, 50)), 1),
+        "ttft_p99_ms": round(float(np.percentile(ttft, 99)), 1),
+        "tokens_per_step": round(
+            decode_emitted_tokens(done) / max(decode_calls, 1), 2
+        ),
+    }
+
+
+def drive_bank(engine, trace) -> dict:
+    """Open loop against the one multi-tenant engine: arrivals land on the
+    clock with their tenant id, submits backdated to the scheduled arrival."""
+    done, i = [], 0
+    calls0 = engine.decode_calls
+    t0 = time.monotonic()
+    while i < len(trace) or engine.has_work:
+        now = time.monotonic() - t0
+        while i < len(trace) and trace[i][0] <= now:
+            off, prompt, aid, max_new = trace[i]
+            engine.submit(prompt, max_new_tokens=max_new, adapter=aid,
+                          submitted_at=t0 + off)
+            i += 1
+        if engine.has_work:
+            done.extend(engine.step())
+        elif i < len(trace):
+            time.sleep(max(trace[i][0] - (time.monotonic() - t0), 0.0))
+    dt = time.monotonic() - t0
+    return _row(done, dt, engine.decode_calls - calls0)
+
+
+def drive_fleet(engines: list, trace) -> dict:
+    """Open loop against one engine PER tenant, round-robin ticked: each
+    arrival goes to its tenant's engine, and every engine with work gets one
+    ``step()`` per scheduler pass — the one-host fleet deployment."""
+    done, i = [], 0
+    calls0 = sum(e.decode_calls for e in engines)
+    t0 = time.monotonic()
+    while i < len(trace) or any(e.has_work for e in engines):
+        now = time.monotonic() - t0
+        while i < len(trace) and trace[i][0] <= now:
+            off, prompt, aid, max_new = trace[i]
+            engines[aid].submit(prompt, max_new_tokens=max_new,
+                                submitted_at=t0 + off)
+            i += 1
+        busy = [e for e in engines if e.has_work]
+        for e in busy:
+            done.extend(e.step())
+        if not busy and i < len(trace):
+            time.sleep(max(trace[i][0] - (time.monotonic() - t0), 0.0))
+    dt = time.monotonic() - t0
+    return _row(done, dt, sum(e.decode_calls for e in engines) - calls0)
+
+
+def run(
+    steps: int = 60,
+    n_adapters: int = 8,
+    requests: int = 32,
+    rate_hz: float = 200.0,
+    max_new: int = 12,
+    max_slots: int = 8,
+    max_len: int = 64,
+    block_size: int = 8,
+    seed: int = 0,
+) -> dict:
+    cfg = bench_arch()
+    tr, state = train_salaad(cfg, steps=steps, scfg=salaad_cfg(), seed=seed)
+    base, tenants = build_tenants(cfg, state, tr.blocks, n_adapters)
+    trace = build_trace(requests, rate_hz, cfg.vocab_size, max_new,
+                        n_adapters, seed)
+    # equal aggregate KV budget: the bank arm pools it, the fleet splits it
+    num_blocks = max_slots * max_len // block_size
+
+    bank = AdapterBank(base, tenants,
+                       names=[f"tenant{i}" for i in range(n_adapters)])
+    eng = PagedServingEngine(bank, EngineConfig(
+        adapters=True, max_slots=max_slots, max_len=max_len,
+        block_size=block_size, num_blocks=num_blocks))
+    for aid in range(n_adapters):              # warm every tenant's path
+        eng.submit([1 + aid, 2, 3], max_new_tokens=2, adapter=aid)
+    eng.run()
+    retraces0 = eng.metrics.retraces()
+    multi = drive_bank(eng, trace)
+    multi["adapter_pool"] = bank.adapter_report()
+    multi["jit_retraces_during_run"] = eng.metrics.retraces() - retraces0
+    multi["engine_config"] = engine_provenance(eng)
+    assert multi["jit_retraces_during_run"] == 0, multi
+
+    fleet = []
+    per_slots = max(max_slots // n_adapters, 1)
+    per_blocks = max(num_blocks // n_adapters, 2)
+    for t in tenants:
+        e = PagedServingEngine(ModelBank.single(cfg, t), EngineConfig(
+            max_slots=per_slots, max_len=max_len, block_size=block_size,
+            num_blocks=per_blocks))
+        e.submit([1, 2, 3], max_new_tokens=2)  # warm: compile outside window
+        e.run()
+        fleet.append(e)
+    single = drive_fleet(fleet, trace)
+    single["engines"] = n_adapters
+    single["slots_per_engine"] = per_slots
+    single["blocks_per_engine"] = per_blocks
+    single["engine_config"] = engine_provenance(fleet[0])
+
+    return {
+        "n_adapters": n_adapters,
+        "kv_budget_tokens": num_blocks * block_size,
+        "multi_tenant": multi,
+        "per_tenant_fleet": single,
+        "summary": {
+            "tok_per_s_speedup": round(
+                multi["tok_per_s"] / max(single["tok_per_s"], 1e-9), 2
+            ),
+            "ttft_p99_speedup": round(
+                single["ttft_p99_ms"] / max(multi["ttft_p99_ms"], 1e-9), 2
+            ),
+            "batch_occupancy_multi": multi["tokens_per_step"],
+            "batch_occupancy_fleet": single["tokens_per_step"],
+        },
+        "train_steps": steps,
+    }
+
+
+def main(out: str = "BENCH_adapters.json", **kw):
+    rows = run(**kw)
+    Path(out).write_text(json.dumps(rows, indent=2))
+    s = rows["summary"]
+    emit(
+        "serve_adapters", 0.0,
+        f"{rows['n_adapters']} tenants: bank {rows['multi_tenant']['tok_per_s']}"
+        f" tok/s vs fleet {rows['per_tenant_fleet']['tok_per_s']} tok/s "
+        f"(x{s['tok_per_s_speedup']}); p99 TTFT x{s['ttft_p99_speedup']}; "
+        f"occupancy {s['batch_occupancy_fleet']} -> "
+        f"{s['batch_occupancy_multi']} tok/step",
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--adapters", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate-hz", type=float, default=None)
+    ap.add_argument("--out", default="BENCH_adapters.json")
+    a = ap.parse_args()
+    main(out=a.out, steps=10 if a.quick else 60, n_adapters=a.adapters,
+         requests=a.requests or (16 if a.quick else 32),
+         rate_hz=a.rate_hz or 200.0,
+         max_new=8 if a.quick else 12)

@@ -42,8 +42,10 @@ from repro.serving.engine import (
 from .common import bench_arch, emit, engine_provenance, salaad_cfg, train_salaad
 
 # None = single-device baseline; the reduced arch is widened to 4 KV heads
-# below so model=4 divides the head axis
-MESHES = (None, "model=2", "model=4")
+# below so model=4 divides the head axis. The data axis is batch parallelism:
+# weights and KV pools replicate (model_axis=1 keeps the residency assertion
+# exact) and only the in-flight batch shards.
+MESHES = (None, "model=2", "model=4", "model=2,data=2")
 
 
 def _drive(engine, requests: int, max_new: int) -> float:

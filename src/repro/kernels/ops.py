@@ -21,6 +21,7 @@ from .page_copy import page_copy_pallas
 from .paged_attention import paged_attention_kquery_pallas, paged_attention_pallas
 from .slr_matmul import (
     BsrStack,
+    slr_matmul_multi_pallas,
     slr_matmul_pallas,
     slr_matmul_stacked_pallas,
     stack_bsr,
@@ -38,6 +39,7 @@ __all__ = [
     "bsr_matmul",
     "slr_matmul",
     "slr_matmul_stacked",
+    "slr_matmul_multi",
     "flash_attention",
     "paged_attention",
     "paged_attention_kquery",
@@ -125,6 +127,57 @@ def slr_matmul_stacked(x, p, vt, stack: BsrStack | None, layer,
         p = jnp.zeros((num_l, x.shape[1], 1), x.dtype)
         vt = jnp.zeros((num_l, 1, stack.shape[1]), x.dtype)
     return slr_matmul_stacked_pallas(x, p, vt, stack, layer, interpret=interp, **kw)
+
+
+def slr_matmul_multi(x, p, vt, stack: BsrStack | None, ids,
+                     interpret: bool | None = None, **kw):
+    """Batched heterogeneous-adapter fused SLR matmul: slot ``b`` of the
+    (B, T, K) activation batch runs adapter ``ids[b]``'s (P, Vt, S) tables,
+    selected per slot inside the kernel's DMA index maps.
+
+    Degenerate corners mirror ``slr_matmul_stacked`` OP FOR OP — the serving
+    parity guarantee (AdapterBank vs ModelBank bitwise-identical streams)
+    depends on each corner running the exact same kernel per slot, so the
+    empty-S corner maps ``lowrank_matmul_pallas`` over slots rather than
+    batching into a differently-tiled einsum.
+    """
+    interp = _auto_interpret() if interpret is None else interpret
+    r = 0 if p is None else p.shape[-1]
+    empty_s = stack is None or getattr(stack, "empty", False)
+    if empty_s and r == 0:
+        m = vt.shape[-1] if vt is not None else stack.shape[1]
+        return jnp.zeros((*x.shape[:2], m), x.dtype)
+    if empty_s:
+        from .slr_matmul import row_tile
+
+        bm = row_tile(x.shape[1], x.dtype, cap=kw.pop("bt", 128))
+        ids = jnp.asarray(ids, jnp.int32)
+
+        def one_slot(args):
+            xb, i = args
+            p_i = jax.lax.dynamic_index_in_dim(p, i, keepdims=False)
+            vt_i = jax.lax.dynamic_index_in_dim(vt, i, keepdims=False)
+            return lowrank_matmul_pallas(xb, p_i, vt_i, bm=bm, interpret=interp)
+
+        return jax.lax.map(one_slot, (x, ids))
+    if r == 0:
+        num_n = stack.counts.shape[0]
+        p = jnp.zeros((num_n, x.shape[2], 1), x.dtype)
+        vt = jnp.zeros((num_n, 1, stack.shape[1]), x.dtype)
+    if interpret is None and interp:
+        # Off-TPU the grid emulation is pathological for THIS op: every
+        # pallas_call charges for the full (A*L, ...) pooled operands and
+        # the N*JB*MAXB scalar table, where on hardware the DMA index maps
+        # move only the B slots' blocks — cost grows with pool capacity,
+        # not with the batch. The jnp oracle performs the same per-slot
+        # gather + matmul in one vectorized pass, so it IS the correct
+        # non-TPU lowering; pass ``interpret=True`` explicitly to exercise
+        # the emulated kernel itself (kernel tests do). The degenerate
+        # corners above stay on the single-tenant kernels in either case —
+        # the bitwise-parity guarantee needs each corner to run the exact
+        # per-slot op the plain tier path runs.
+        return ref.slr_matmul_multi_ref(x, p, vt, stack, ids)
+    return slr_matmul_multi_pallas(x, p, vt, stack, ids, interpret=interp, **kw)
 
 
 def flash_attention(q, k, v, causal=True, interpret: bool | None = None, **kw):

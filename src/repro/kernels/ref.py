@@ -56,6 +56,15 @@ def slr_matmul_stacked_ref(x: jax.Array, p, vt, stack, layer) -> jax.Array:
     )
 
 
+def slr_matmul_multi_ref(x: jax.Array, p, vt, stack, ids) -> jax.Array:
+    """Per-slot oracle for the multi-adapter kernel: slot ``b`` runs the
+    stacked oracle with adapter ``ids[b]``'s tables."""
+    ids = jnp.asarray(ids, jnp.int32)
+    return jax.vmap(
+        lambda xb, i: slr_matmul_stacked_ref(xb, p, vt, stack, i)
+    )(x, ids)
+
+
 def paged_attention_ref(
     q: jax.Array,            # (B, Hq, D) single decode query per slot
     k_pages: jax.Array,      # (num_pages, Hkv, bs, D) page pool

@@ -28,6 +28,13 @@ so the layer slice happens in the kernel's DMA index maps — no XLA gather of
 the weight stack — and `bsr`/`fused` deployments become ``lax.scan``-able
 over the transformer layer stack instead of unrolling it.
 
+The multi-adapter variant generalizes the layer axis into an *adapter* axis
+selected per batch slot: tables carry a leading adapter axis ``N`` and the
+scalar buffer leads with a ``(B,)`` slot->adapter map, so one decode tick
+serves B slots each running a DIFFERENT (P, Vt, S) adapter — the adapter
+gather again lives entirely in the DMA index maps, one compiled program for
+any slot->adapter assignment.
+
 Callers pick decode-width row tiles (``bt`` rounded to the sublane tile, not
 padded to 128) so a 4-row decode batch doesn't burn 32x padding FLOPs.
 """
@@ -48,6 +55,7 @@ __all__ = [
     "stack_bsr",
     "slr_matmul_pallas",
     "slr_matmul_stacked_pallas",
+    "slr_matmul_multi_pallas",
     "row_tile",
 ]
 
@@ -390,3 +398,149 @@ def slr_matmul_stacked_pallas(
         ),
     )(scalars, x, p, vt, stack.vals)
     return y[:t_dim, :m]
+
+
+def _multi_kernel(scalars_ref, x_ref, p_ref, vt_ref, vals_ref, y_ref,
+                  t_ref, acc_ref, *, k_tiles: int, jb: int, maxb: int,
+                  tiles: int, counts_base: int):
+    # scalar buffer layout: [ids (B,), counts (N*JB,), rows (N*JB*MAXB,)]
+    ph = pl.program_id(1)
+    aid = scalars_ref[pl.program_id(0) // tiles]
+
+    @pl.when(ph < k_tiles)
+    def lowrank_accumulate():
+        @pl.when(ph == 0)
+        def init():
+            t_ref[...] = jnp.zeros_like(t_ref)
+
+        t_ref[...] += jnp.dot(
+            x_ref[...].astype(jnp.float32),
+            p_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    e = jnp.maximum(ph - k_tiles, 0)
+    j, t = e // maxb, e % maxb
+
+    @pl.when(ph >= k_tiles)
+    def epilogue():
+        @pl.when(t == 0)
+        def lowrank_emit():
+            acc_ref[...] = jnp.dot(
+                t_ref[...], vt_ref[0].astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+
+        @pl.when(t < scalars_ref[counts_base + aid * jb + j])
+        def sparse_accumulate():
+            acc_ref[...] += jnp.dot(
+                x_ref[...].astype(jnp.float32),
+                vals_ref[0, 0, 0].astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+
+        @pl.when(t == maxb - 1)
+        def emit():
+            y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def slr_matmul_multi_pallas(
+    x: jax.Array,      # (B, T, K) — B batch slots
+    p: jax.Array,      # (N, K, r) — N resident adapters
+    vt: jax.Array,     # (N, r, M)
+    stack: BsrStack,   # per-adapter block-CSC S, shape (K, M)
+    ids: jax.Array,    # (B,) int32 — slot -> adapter row
+    bt: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched heterogeneous-adapter fused SLR matmul: y[b] uses adapter
+    ``ids[b]``'s (P, Vt, S) tables.
+
+    The slot->adapter map rides at the head of the scalar-prefetch buffer:
+    the major grid axis walks ``B * tiles`` row tiles and every DMA index map
+    looks up ``ids[i // tiles]`` to pick the adapter slice — one compiled
+    program serves any assignment of adapters to slots. Row padding is per
+    slot (each slot's T rounds up to ``bt`` independently), so no row tile
+    ever spans two slots.
+    """
+    b_dim, t_dim, k_dim = x.shape
+    n_s, m = stack.shape
+    num_n, _, r = p.shape
+    assert k_dim == n_s and p.shape[1] == k_dim and vt.shape == (num_n, r, m), (
+        x.shape, p.shape, vt.shape, stack.shape
+    )
+    assert ids.shape == (b_dim,), (ids.shape, b_dim)
+    assert r > 0, "dispatch r == 0 through a zero-rank dummy (ops does)"
+    bs = stack.block_size
+    n_pad, m_pad = stack.padded_shape
+    _, jb, maxb = stack.rows.shape
+    bt = row_tile(t_dim, x.dtype, cap=bt)
+    t_pad = -(-t_dim // bt) * bt
+
+    x = jnp.pad(x, ((0, 0), (0, t_pad - t_dim), (0, n_pad - k_dim)))
+    x = x.reshape(b_dim * t_pad, n_pad)
+    p = jnp.pad(p, ((0, 0), (0, n_pad - k_dim), (0, 0)))
+    vt = jnp.pad(vt, ((0, 0), (0, 0), (0, m_pad - m)))
+
+    k_tiles = n_pad // bs
+    tiles = t_pad // bt  # row tiles per slot
+    grid = (b_dim * tiles, k_tiles + jb * maxb)
+    scalars = jnp.concatenate([
+        jnp.asarray(ids, jnp.int32).reshape(-1),
+        stack.counts.reshape(-1).astype(jnp.int32),
+        stack.rows.reshape(-1).astype(jnp.int32),
+    ])
+    counts_base = b_dim
+    rows_base = b_dim + num_n * jb
+
+    def sparse_jt(ph):
+        e = jnp.maximum(ph - k_tiles, 0)
+        return e // maxb, e % maxb
+
+    def x_map(i, ph, sc):
+        j, t = sparse_jt(ph)
+        row = sc[rows_base + (sc[i // tiles] * jb + j) * maxb + t]
+        return (i, jnp.where(ph < k_tiles, ph, row))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bs), x_map),
+            pl.BlockSpec(
+                (1, bs, r),
+                lambda i, ph, sc: (
+                    sc[i // tiles], jnp.minimum(ph, k_tiles - 1), 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, r, bs),
+                lambda i, ph, sc: (sc[i // tiles], 0, sparse_jt(ph)[0]),
+            ),
+            pl.BlockSpec(
+                (1, 1, 1, bs, bs),
+                lambda i, ph, sc: (sc[i // tiles], *sparse_jt(ph), 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (bt, bs), lambda i, ph, sc: (i, sparse_jt(ph)[0])
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bt, r), jnp.float32),
+            pltpu.VMEM((bt, bs), jnp.float32),
+        ],
+    )
+    y = pl.pallas_call(
+        functools.partial(
+            _multi_kernel, k_tiles=k_tiles, jb=jb, maxb=maxb,
+            tiles=tiles, counts_base=counts_base,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b_dim * t_pad, m_pad), x.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+    )(scalars, x, p, vt, stack.vals)
+    return y.reshape(b_dim, t_pad, m_pad)[:, :t_dim, :m]

@@ -11,6 +11,12 @@ eviction. All engines implement the ``serving.elastic.Engine`` protocol
 (submit / step / run / has_work / capabilities); the per-engine capability
 table is printed in ``--help``.
 
+``--adapters N`` switches to multi-tenant serving: N SLR adapters (HPA views
+at spread budgets) are registered over ONE shared base and served through a
+single ``serving.adapters.AdapterBank`` engine, requests round-robin across
+tenants; ``--max-resident-adapters`` bounds the device adapter pool and turns
+on LRU swapping (docs/serving.md, "Multi-tenant adapters").
+
 Observability (docs/observability.md): ``--trace-out trace.json`` records a
 per-request span trace and writes Chrome trace-event JSON (open in Perfetto);
 ``--metrics-port N`` serves the Prometheus text exposition of the engine's
@@ -39,6 +45,7 @@ from repro.core.admm import SalaadConfig, init_slr_state
 from repro.core.hpa import hpa_keep_ratio
 from repro.core.selection import SelectionConfig
 from repro.models import model as model_lib
+from repro.serving.adapters import AdapterBank, adapterize
 from repro.serving.deployed import DeployedModel
 from repro.serving.elastic import ModelBank, format_capability_table
 from repro.serving.engine import (
@@ -62,10 +69,12 @@ ENGINES = {
 
 
 def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
-                slo_ms: float | None = None, tiers=(None,)) -> dict:
+                slo_ms: float | None = None, tiers=(None,),
+                adapters=(None,)) -> dict:
     """Drive one engine (Engine protocol) over a random trace, requests
-    spread round-robin over ``tiers``; per-tier token counts ride in the
-    stats so the elastic spectrum stays visible in one engine's output."""
+    spread round-robin over ``tiers`` (and, for an AdapterBank engine, over
+    ``adapters``); per-tier / per-adapter token counts ride in the stats so
+    the elastic spectrum and the tenant mix stay visible in one output."""
     rng = np.random.RandomState(seed)
     # with the prompt cache on, give the trace something to share: every
     # request opens with the same two-page "system prompt"
@@ -79,6 +88,7 @@ def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
             prompt, max_new_tokens=max_new,
             deadline=None if slo_ms is None else submitted + slo_ms / 1e3,
             tier=tiers[i % len(tiers)],
+            adapter=adapters[i % len(adapters)],
         )
     # engine timestamps (first_token_at etc.) are time.monotonic() values, so
     # latency math must use the same clock — an NTP step mid-run would
@@ -101,6 +111,15 @@ def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
         by_tier[r.tier] = by_tier.get(r.tier, 0) + len(r.out_tokens)
     if len(by_tier) > 1 or (by_tier and next(iter(by_tier)) != 0):
         stats["tokens_by_tier"] = {str(k): v for k, v in sorted(by_tier.items())}
+    by_adapter: dict[int, int] = {}
+    for r in done:
+        if r.adapter is not None:
+            by_adapter[r.adapter] = by_adapter.get(r.adapter, 0) \
+                + len(r.out_tokens)
+    if by_adapter:
+        stats["tokens_by_adapter"] = {
+            str(k): v for k, v in sorted(by_adapter.items())
+        }
     # TTFT on the submitted_at basis (every request here is submitted before
     # run() starts, so this matches the old run-start basis); percentiles
     # come from the registry histogram when telemetry is on
@@ -139,7 +158,8 @@ def serve_batch(engine, vocab: int, requests: int, max_new: int, seed: int,
     return stats
 
 
-def serve_with_observability(engine, args, vocab: int, tiers=(None,)) -> dict:
+def serve_with_observability(engine, args, vocab: int, tiers=(None,),
+                             adapters=(None,)) -> dict:
     """Run ``serve_batch`` with the requested exports attached: a request
     tracer when ``--trace-out``/``--trace-events`` is set, and a live
     Prometheus endpoint when ``--metrics-port`` is set (``--metrics-out``
@@ -152,7 +172,8 @@ def serve_with_observability(engine, args, vocab: int, tiers=(None,)) -> dict:
         server = start_metrics_server(engine.metrics.registry,
                                       port=args.metrics_port)
     stats = serve_batch(engine, vocab, args.requests, args.max_new,
-                        args.seed, args.slo_ms, tiers=tiers)
+                        args.seed, args.slo_ms, tiers=tiers,
+                        adapters=adapters)
     if server is not None:
         port = server.server_address[1]
         stats["metrics_port"] = port
@@ -260,6 +281,15 @@ def main():
                          "head/ffn dims over 'model' (must divide the head "
                          "counts); on CPU force devices with "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--adapters", type=int, default=0,
+                    help="multi-tenant mode: register N SLR adapters (HPA "
+                         "views at spread budgets) over ONE shared base and "
+                         "serve them through a single AdapterBank engine, "
+                         "requests round-robin across tenants "
+                         "(docs/serving.md#multi-tenant-adapters)")
+    ap.add_argument("--max-resident-adapters", type=int, default=None,
+                    help="device adapter-pool rows; fewer than --adapters "
+                         "turns on LRU swapping (None = all resident)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -307,7 +337,35 @@ def main():
         tier_policy=args.tier_policy,
         spec_k=spec_k, spec_adaptive=args.spec_adaptive,
         mesh=args.mesh,
+        adapters=args.adapters > 0,
+        max_resident_adapters=args.max_resident_adapters,
     )
+
+    if args.adapters:
+        # N tenants as HPA views at spread budgets over ONE shared base —
+        # each adapterized onto the base so only the SLR sites differ per
+        # tenant and the rest of the tree is stored once
+        spread = np.linspace(1.0, 0.4, args.adapters)
+        slr_c, _ = hpa_keep_ratio(slr, blocks, 1.0, args.kappa)
+        base = DeployedModel.build(cfg, params, slr_c, blocks, fmt=args.fmt)
+        tenants = []
+        for keep in spread:
+            slr_k, _ = hpa_keep_ratio(slr, blocks, float(keep), args.kappa)
+            tenants.append(adapterize(
+                base, DeployedModel.build(cfg, params, slr_k, blocks,
+                                          fmt=args.fmt)))
+        bank = AdapterBank(base, tenants,
+                           names=[f"tenant{i}" for i in range(args.adapters)])
+        engine = engine_cls(bank, ecfg)
+        stats = serve_with_observability(
+            engine, args, cfg.vocab_size,
+            adapters=tuple(range(args.adapters)))
+        print(json.dumps({
+            "fmt": args.fmt,
+            "adapters": bank.adapter_report(),
+            **stats,
+        }))
+        return
 
     if args.keep_ratios is None:
         bank = ModelBank.single(cfg, params)

@@ -161,7 +161,8 @@ class ModelBank:
     @classmethod
     def single(cls, cfg, weights) -> "ModelBank":
         """Wrap one already-deployed model (or a raw param tree) as a
-        single-tier bank — the shim target for pre-elastic callers."""
+        single-tier bank — the shortest path from one weight tree to an
+        engine constructor."""
         return cls(cfg, [weights])
 
     # ------------------------------------------------------------ access ---
@@ -256,9 +257,12 @@ class Engine(Protocol):
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                deadline: float | None = None,
                tier: int | None = None,
+               adapter: int | None = None,
                submitted_at: float | None = None) -> int:
         """Enqueue a request; returns its uid. ``tier`` pins the request to a
-        bank tier (None = the engine's default tier). ``submitted_at``
+        bank tier (None = the engine's default tier). ``adapter`` names a
+        registered adapter when the engine serves an ``AdapterBank``
+        (None = the bank's default adapter). ``submitted_at``
         (monotonic clock) lets open-loop harnesses backdate the submission to
         the SCHEDULED arrival — the one timestamp basis every TTFT metric
         uses (None = now). Raises ``RequestRejected`` when the request can

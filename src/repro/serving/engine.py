@@ -75,9 +75,19 @@ each tier's program compiles exactly once, on first use). On the paged engine
 ``tier_policy='pressure'`` runs a :class:`~repro.serving.elastic.
 TierController`: under page pressure the serving tier downshifts (cheaper
 steps, sooner completions, sooner frees) BEFORE the engine resorts to
-eviction, and upshifts when pressure clears. The old ``Engine(arch_cfg,
-params, ecfg)`` constructors still work through a shim that wraps the weights
-as a single-tier bank and emits a ``DeprecationWarning``.
+eviction, and upshifts when pressure clears.
+
+Multi-tenant adapters (``serving/adapters.py``): constructing an engine from
+an :class:`~repro.serving.adapters.AdapterBank` (with ``EngineConfig.
+adapters=True``) serves N registered (L+S) adapters over one shared base.
+Requests pick an adapter at ``submit``; admission pins it into the bank's
+fixed-capacity device pool (LRU swap-in for non-resident adapters, counted
+by ``serve_adapter_swaps_total``), and each tick either batches slots running
+DIFFERENT adapters through one fused multi-adapter program (``batched`` mode,
+fused format) or runs one program per distinct resident adapter (``grouped``
+mode). Pool swaps and per-call ``sel`` binds are data-only, so adapter
+switches never retrace; under the prefix cache each adapter gets its own
+radix index (KV pages are adapter-specific) over the one shared allocator.
 """
 from __future__ import annotations
 
@@ -85,7 +95,6 @@ import contextlib
 import json
 import logging
 import time
-import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -95,6 +104,7 @@ import numpy as np
 from ..models import model as model_lib
 from ..models import transformer as transformer_lib
 from ..parallel.sharding import ServingMesh, parse_mesh_spec
+from .adapters import AdapterBank, AdapterError
 from .deployed import DeployedModel
 from .elastic import ModelBank, TierController, TierControllerConfig
 from .prefix_cache import PrefixCache
@@ -159,6 +169,8 @@ class Request:
     token_times: list[float] = field(default_factory=list)
     deadline: float | None = None    # absolute WALL-CLOCK SLO deadline
     tier: int = 0                    # requested ModelBank tier (0 = largest)
+    adapter: int | None = None       # AdapterBank adapter id (multi-tenant
+    #                                  serving; always None on plain banks)
     evictions: int = 0
     requeued_at: float = 0.0         # last eviction's re-queue stamp — the
     #                                  basis for a RE-admission's queue wait
@@ -228,6 +240,12 @@ class EngineConfig:
     # dataclasses.asdict / JSON-safe (engine_provenance) and never touches
     # jax device state at construction; the engine builds the ServingMesh.
     mesh: str | None = None
+    # multi-tenant adapter serving (serving/adapters.py): True means the
+    # engine's bank IS an AdapterBank (and vice versa — the flag keeps
+    # multi-tenancy explicit in config / provenance dumps, never inferred)
+    adapters: bool = False
+    max_resident_adapters: int | None = None  # device adapter-pool rows;
+    #                                           None = all registered resident
 
     def __post_init__(self):
         """Validate at CONSTRUCTION: a bad config used to surface as a
@@ -308,6 +326,19 @@ class EngineConfig:
             # device-count and head-divisibility checks need the arch + real
             # devices and happen in the engine constructor
             parse_mesh_spec(self.mesh)
+        if self.max_resident_adapters is not None:
+            if not isinstance(self.max_resident_adapters, int) \
+                    or self.max_resident_adapters < 1:
+                raise ValueError(
+                    f"max_resident_adapters={self.max_resident_adapters!r} "
+                    "must be a positive int (or None for every registered "
+                    "adapter resident)"
+                )
+            if not self.adapters:
+                raise ValueError(
+                    "max_resident_adapters sizes the AdapterBank device pool "
+                    "and needs adapters=True"
+                )
 
 
 def decode_emitted_tokens(done: list[Request]) -> int:
@@ -324,11 +355,12 @@ def decode_emitted_tokens(done: list[Request]) -> int:
 def _resolve_engine_args(name: str, model, params=None, ecfg=None):
     """Resolve the Engine-protocol constructor contract.
 
-    New contract: ``Engine(bank, ecfg)`` where ``bank`` is a
-    :class:`~repro.serving.elastic.ModelBank` (a bare ``DeployedModel`` is
-    accepted as a single-tier convenience). The deprecated ``Engine(arch_cfg,
-    params, ecfg)`` form still works: the weights are wrapped as a
-    single-tier bank and a ``DeprecationWarning`` is emitted.
+    ``Engine(bank, ecfg)`` where ``bank`` is a :class:`~repro.serving.
+    elastic.ModelBank` — including a multi-tenant :class:`~repro.serving.
+    adapters.AdapterBank` — or a bare ``DeployedModel`` (accepted as a
+    single-tier convenience). The pre-elastic ``Engine(arch_cfg, params,
+    ecfg)`` form was removed after its deprecation cycle and now raises a
+    ``TypeError`` naming the replacement.
     """
     if isinstance(model, (ModelBank, DeployedModel)):
         if params is not None and ecfg is not None:
@@ -350,18 +382,12 @@ def _resolve_engine_args(name: str, model, params=None, ecfg=None):
             f"{name} expects a ModelBank (serving.elastic) or DeployedModel "
             f"first argument, got {type(model).__name__}"
         )
-    if params is None or isinstance(params, EngineConfig):
-        raise TypeError(
-            f"{name}(arch_cfg, params, ecfg) is missing the weights argument"
-        )
-    warnings.warn(
-        f"{name}(arch_cfg, params, ecfg) is deprecated: build a ModelBank "
-        f"(serving/elastic.py) and construct {name}(bank, ecfg) — one bank "
-        "serves the whole budget spectrum",
-        DeprecationWarning, stacklevel=3,
+    raise TypeError(
+        f"{name}(arch_cfg, params, ecfg) was removed: build a ModelBank "
+        f"(serving/elastic.py) — or a serving.adapters.AdapterBank for "
+        f"multi-tenant serving — and construct {name}(bank, ecfg); "
+        f"ModelBank.single(arch_cfg, params) wraps one weight tree"
     )
-    return ModelBank.single(model, params), \
-        ecfg if ecfg is not None else EngineConfig()
 
 
 def _bank_tier_state(bank: ModelBank, ecfg: EngineConfig):
@@ -526,6 +552,7 @@ class ServingEngine:
                 "tier_pressure_controller": False,
                 "prefix_caching": False,
                 "tensor_parallel": True,
+                "multi_tenant_adapters": True,
             },
         }
 
@@ -566,6 +593,30 @@ class ServingEngine:
                 "controller needs the paged engine. Engine capabilities: "
                 f"{json.dumps(self.capabilities(), sort_keys=True)}"
             )
+        # multi-tenant adapters: the bank type and the config flag must agree
+        # — neither a silently-ignored AdapterBank nor a flag with no pool
+        self._adapters: AdapterBank | None = \
+            bank if isinstance(bank, AdapterBank) else None
+        if ecfg.adapters != (self._adapters is not None):
+            raise ValueError(
+                "adapters=True needs an AdapterBank (serving.adapters) as the "
+                "engine's bank, and an AdapterBank needs adapters=True — got "
+                f"adapters={ecfg.adapters} with {type(bank).__name__}"
+            )
+        if self._adapters is not None:
+            if ecfg.mesh is not None:
+                raise ValueError(
+                    f"mesh={ecfg.mesh!r} + adapters is unsupported: the "
+                    "pooled adapter tables are indexed by scalar-prefetched "
+                    "DMA maps no axis partition can split; serve adapters "
+                    "unsharded"
+                )
+            if self._speculative:
+                raise EngineCapabilityError(
+                    "SpeculativeEngine does not serve AdapterBanks (draft + "
+                    "verify would each need a pool); use PagedServingEngine"
+                )
+            self._adapters.materialize(ecfg.max_resident_adapters)
         self.cfg = arch_cfg
         self.ecfg = ecfg
         self.bank = bank
@@ -582,6 +633,11 @@ class ServingEngine:
         # effective tier per slot (requested tier + controller downshift),
         # refreshed every tick; decode groups by this
         self._slot_tier = np.zeros(ecfg.max_slots, np.int64)
+        # multi-tenant: adapter-pool row per slot (batched decode binds this
+        # map verbatim) + the adapter id each slot pinned (unpinned when the
+        # slot releases, so LRU never swaps out a streaming adapter)
+        self._slot_pool = np.zeros(ecfg.max_slots, np.int32)
+        self._slot_adapter: dict[int, int] = {}
         self._tier_shift = 0
         self.tier_controller: TierController | None = None
         self._queue: list[Request] = []
@@ -612,6 +668,8 @@ class ServingEngine:
         # properties over this registry — one metrics substrate everywhere
         self.metrics = (EngineTelemetry if ecfg.telemetry
                         else NullTelemetry)(type(self).__name__)
+        if self._adapters is not None:
+            self.metrics.set_resident_adapters(len(self._adapters.resident))
         self.tracer: RequestTracer | None = None
         if ecfg.trace:
             self.start_trace()
@@ -663,14 +721,17 @@ class ServingEngine:
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                deadline: float | None = None,
                tier: int | None = None,
-               submitted_at: float | None = None) -> int:
+               submitted_at: float | None = None,
+               adapter: int | None = None) -> int:
         """Enqueue a request. ``submitted_at`` (monotonic clock) lets open-
         loop harnesses backdate the submission to the SCHEDULED arrival, so
         TTFT/queue-wait metrics share one basis however the driver batches
-        its submits; None = now."""
+        its submits; None = now. ``adapter`` picks a registered AdapterBank
+        adapter (None = the bank's default; rejected on plain-bank engines)."""
         try:
             self._validate(prompt, max_new_tokens)
             tier_r = self._resolve_tier(tier)
+            adapter_r = self._resolve_adapter(adapter)
         except RequestRejected:
             self.metrics.on_reject()
             raise
@@ -679,7 +740,7 @@ class ServingEngine:
             Request(self._uid, list(prompt), max_new_tokens,
                     submitted_at=_now() if submitted_at is None
                     else submitted_at,
-                    deadline=deadline, tier=tier_r)
+                    deadline=deadline, tier=tier_r, adapter=adapter_r)
         )
         self.metrics.on_submit()
         return self._uid
@@ -689,6 +750,23 @@ class ServingEngine:
 
     def _resolve_tier(self, tier: int | None) -> int:
         return _resolve_request_tier(self.bank, self._default_tier, tier)
+
+    def _resolve_adapter(self, adapter: int | None) -> int | None:
+        """Validated adapter id (None = the bank's default). Submit-time
+        errors are ``RequestRejected``, like tiers; an adapter unregistered
+        AFTER submit is caught at admission instead (the request finishes
+        rejected — the graceful error path)."""
+        if self._adapters is None:
+            if adapter is not None:
+                raise RequestRejected(
+                    f"adapter={adapter} needs an AdapterBank engine "
+                    "(serving.adapters); this engine serves a plain ModelBank"
+                )
+            return None
+        aid = self._adapters.default_adapter if adapter is None else adapter
+        if aid not in self._adapters.registry:
+            raise RequestRejected(f"unknown adapter id {aid}")
+        return aid
 
     # ------------------------------------------------------------- tiers ---
 
@@ -715,12 +793,59 @@ class ServingEngine:
                                         frm=int(self._slot_tier[slot]), to=eff)
                 self._slot_tier[slot] = eff
 
-    def _tier_groups(self, slots) -> list[tuple[int, list[int]]]:
-        """Active slots grouped by effective tier (ascending tier index)."""
-        groups: dict[int, list[int]] = {}
+    def _tier_groups(self, slots) -> list[tuple]:
+        """Active slots grouped by program key (ascending): the effective
+        tier, widened — grouped adapter mode only — to ``(tier, pool row)``
+        so every call serves ONE adapter through the single-tenant ops.
+        Batched adapter mode keeps the plain tier key: one multi-adapter
+        program covers mixed-adapter slots."""
+        grouped = self._adapters is not None \
+            and self._adapters.mode == "grouped"
+        groups: dict = {}
         for s in slots:
-            groups.setdefault(int(self._slot_tier[s]), []).append(s)
+            key = (int(self._slot_tier[s]), int(self._slot_pool[s])) \
+                if grouped else int(self._slot_tier[s])
+            groups.setdefault(key, []).append(s)
         return sorted(groups.items())
+
+    # ---------------------------------------------------------- adapters ---
+
+    def _adapter_admit(self, req: Request, done: list[Request]):
+        """Acquire + pin ``req``'s adapter into the device pool. Returns
+        ``("ok", row)`` (``row`` is None on plain banks); ``("busy", None)``
+        when every pool row is pinned by a streaming slot — keep the request
+        queued and retry next tick; ``("gone", None)`` when the adapter was
+        unregistered after submit — the request finishes rejected."""
+        if self._adapters is None:
+            return "ok", None
+        try:
+            row, swapped = self._adapters.acquire(req.adapter)
+        except AdapterError:
+            req.done = True
+            req.finished_at = _now()
+            self.metrics.on_reject()
+            done.append(req)
+            return "gone", None
+        if row is None:
+            return "busy", None
+        if swapped:
+            self.metrics.inc(self.metrics.adapter_swaps)
+        self._adapters.pin(req.adapter)
+        self.metrics.set_resident_adapters(len(self._adapters.resident))
+        return "ok", row
+
+    def _call_params(self, key, rows=None):
+        """The parameter tree for ONE program call: the tier's tree on plain
+        banks; on AdapterBanks a fresh ``bind`` of the live pool — a grouped
+        key carries its pool row (one adapter per call, scalar sel), batched
+        calls bind the ``rows`` map (slot- or group-indexed, matching the
+        program's row convention). Binds are data-only: same treedef and
+        shapes every call, so programs never retrace across adapters."""
+        if self._adapters is None:
+            return self._tier_params[key]
+        if isinstance(key, tuple):            # grouped: (tier, pool row)
+            return self._adapters.bind(key[1])
+        return self._adapters.bind(np.asarray(rows, np.int32))
 
     def _order_queue(self):
         """Earliest-deadline-first admission order, shared by BOTH batched
@@ -813,33 +938,46 @@ class ServingEngine:
         s = self.ecfg.max_slots
         now = _now()
         admitted: list[tuple[int, Request]] = []
+        requeue: list[Request] = []
         for req in reqs:
+            astat, arow = self._adapter_admit(req, done)
+            if astat == "gone":
+                continue
+            if astat == "busy":     # every pool row pinned: retry next tick
+                requeue.append(req)
+                continue
             slot = free.pop()
             self.metrics.on_admit(req, slot, now,
                                   prefill_tokens=len(req.prompt))
             req.admitted_at = now
             self._active[slot] = req
             self._slot_tier[slot] = self._effective_tier(req)
+            if arow is not None:
+                self._slot_pool[slot] = arow
+                self._slot_adapter[slot] = req.adapter
             if self.tracer is not None:
                 self.tracer.request_begin(slot, req.uid, t=now, tier=req.tier)
                 self.tracer.begin_span(slot, "prefill", t=now,
                                        tokens=len(req.prompt))
             admitted.append((slot, req))
-        for tier, slots in self._tier_groups(slot for slot, _ in admitted):
+        self._queue[:0] = requeue
+        for key, slots in self._tier_groups(slot for slot, _ in admitted):
             group = [(slot, self._active[slot]) for slot in slots]
             bucket = self._bucket(max(len(r.prompt) for _, r in group))
             tokens = np.zeros((s, bucket), np.int32)
             lengths = np.ones((s,), np.int32)     # padded rows: 1 valid token
             slot_ids = np.full((s,), s, np.int32)  # out-of-range => dropped
+            rows = np.zeros((s,), np.int32)        # GROUP-indexed pool rows
             for i, (slot, req) in enumerate(group):
                 tokens[i, : len(req.prompt)] = req.prompt
                 lengths[i] = len(req.prompt)
                 slot_ids[i] = slot
+                rows[i] = self._slot_pool[slot]
             with self.metrics.measure_program(
-                f"prefill[{bucket}]", tier, traces=lambda: self.prefill_traces
+                f"prefill[{bucket}]", key, traces=lambda: self.prefill_traces
             ):
                 first, self.cache = self._prefill(
-                    self._tier_params[tier], jnp.asarray(tokens),
+                    self._call_params(key, rows), jnp.asarray(tokens),
                     jnp.asarray(lengths), jnp.asarray(slot_ids), self.cache,
                     jnp.asarray(step, jnp.int32),
                 )
@@ -860,6 +998,8 @@ class ServingEngine:
         # each generated token exactly once, however many times eviction
         # re-prefills its context (re-work lands in kind="prefill_compute")
         self.metrics.on_token(req, now, first)
+        if self._adapters is not None:
+            self.metrics.inc(self.metrics.adapter_tokens, 1, str(req.adapter))
         tr = self.tracer
         if tr is not None and tr.has_open(slot, "prefill"):
             # prefill (or resume re-prefill) just yielded its token: close
@@ -893,7 +1033,13 @@ class ServingEngine:
         ``_release`` returns whatever it kept to the pool."""
 
     def _release(self, slot: int):
-        """Hook: the paged engine returns the slot's pages to the pool."""
+        """Hook extended by the paged engine (it returns the slot's pages);
+        the base unpins the slot's adapter so LRU residency can swap it out
+        once no slot streams with it."""
+        if self._adapters is not None:
+            aid = self._slot_adapter.pop(slot, None)
+            if aid is not None:
+                self._adapters.unpin(aid)
 
     def _pre_decode(self, free: list[int], done: list[Request]):
         """Hook: the paged engine grows page allocations / evicts here."""
@@ -965,6 +1111,8 @@ class ServingEngine:
         self.metrics.set_pool(queue=len(self._queue),
                               active=len(self._active),
                               shift=self._tier_shift)
+        if self._adapters is not None:
+            self.metrics.set_resident_adapters(len(self._adapters.resident))
 
     def _decode_tick(self, active: np.ndarray, free: list[int],
                      done: list[Request]):
@@ -982,15 +1130,15 @@ class ServingEngine:
         tok_dev = jnp.asarray(tokens)
         step_dev = jnp.asarray(self._steps, jnp.int32)
         out = np.zeros((s,), np.int64)
-        for tier, slots in self._tier_groups(decode_slots):
+        for key, slots in self._tier_groups(decode_slots):
             mask = np.zeros((s,), bool)
             mask[slots] = True
             with self.metrics.measure_program(
-                "decode", tier, traces=lambda: self.decode_traces
+                "decode", key, traces=lambda: self.decode_traces
             ):
                 nxt, self.cache = self._decode(
-                    self._tier_params[tier], tok_dev, self._device_cache(),
-                    jnp.asarray(mask), step_dev,
+                    self._call_params(key, self._slot_pool), tok_dev,
+                    self._device_cache(), jnp.asarray(mask), step_dev,
                 )
                 self.decode_calls += 1
                 toks = np.asarray(nxt)       # one host sync per active tier
@@ -1182,9 +1330,15 @@ class PagedServingEngine(ServingEngine):
         self.chunk_calls = 0
         self.chunk_traces = 0
         # prefix sharing (serving/prefix_cache.py): radix index over prompt
-        # prefixes at page granularity + the CoW copy program
+        # prefixes at page granularity + the CoW copy program. Multi-tenant:
+        # cached KV depends on the adapter's weights, so pages must never
+        # match across adapters — one index PER ADAPTER ID (created on
+        # demand by _prefix_of), all holding references in the ONE shared
+        # allocator; an unregistered adapter's index simply stops being
+        # consulted and its pages age out through the shared LRU reclaim
         self._prefix = PrefixCache(self.allocator, bs) \
-            if ecfg.prefix_cache else None
+            if ecfg.prefix_cache and self._adapters is None else None
+        self._prefix_caches: dict[int, PrefixCache] = {}
         # slot -> device-length reset applied at the next _device_cache push:
         # a hit admission's length is stale until its first chunk program
         # runs, and junk rows written meanwhile must not land in pages the
@@ -1252,6 +1406,25 @@ class PagedServingEngine(ServingEngine):
         return int(self.metrics.counter_value(self.metrics.prefix,
                                               "reattached_pages"))
 
+    def _prefix_of(self, aid: int | None) -> PrefixCache | None:
+        """The radix index serving adapter ``aid``: the shared one on plain
+        banks, a per-adapter index under multi-tenant serving (created on
+        first use — cached KV is adapter-specific). None with the cache off."""
+        if not self.ecfg.prefix_cache:
+            return None
+        if self._adapters is None:
+            return self._prefix
+        pc = self._prefix_caches.get(aid)
+        if pc is None:
+            pc = self._prefix_caches[aid] = PrefixCache(self.allocator,
+                                                        self._bs)
+        return pc
+
+    def _all_prefixes(self) -> list[PrefixCache]:
+        if self._prefix is not None:
+            return [self._prefix]
+        return list(self._prefix_caches.values())
+
     def _update_gauges(self):
         if not self.metrics.enabled:
             return
@@ -1261,7 +1434,7 @@ class PagedServingEngine(ServingEngine):
         # walk is exactly the overhead telemetry promises not to add
         self.metrics.set_pool(
             free=self.allocator.free_blocks,
-            cached=self._prefix.pages if self._prefix is not None else 0,
+            cached=sum(pc.pages for pc in self._all_prefixes()),
         )
 
     def _update_tier_shift(self):
@@ -1272,8 +1445,8 @@ class PagedServingEngine(ServingEngine):
         must not read as a starved one."""
         if self.tier_controller is None:
             return
-        free_like = self.allocator.free_blocks + (
-            self._prefix.reclaimable_pages if self._prefix is not None else 0
+        free_like = self.allocator.free_blocks + sum(
+            pc.reclaimable_pages for pc in self._all_prefixes()
         )
         self._tier_shift = self.tier_controller.update(
             free_like / self.num_blocks
@@ -1369,13 +1542,20 @@ class PagedServingEngine(ServingEngine):
         cow_pairs: list[tuple[int, int]] = []
         while self._queue and free:
             req = self._queue[0]
+            astat, arow = self._adapter_admit(req, done)
+            if astat == "gone":           # unregistered after submit:
+                self._queue.pop(0)        # finished rejected, next request
+                continue
+            if astat == "busy":           # every pool row pinned by a
+                break                     # streaming slot: retry next tick
             ptoks = req.prompt + req.out_tokens      # evicted requests resume
             plen = len(ptoks)
             hit: list[int] = []
             s0 = 0           # prefill resumes here; tokens < s0 are cached
-            if self._prefix is not None:
+            pc = self._prefix_of(req.adapter)
+            if pc is not None:
                 self.metrics.prefix_event("lookups")
-                hit = self._prefix.match(ptoks)
+                hit = pc.match(ptoks)
                 if len(hit) < self.ecfg.prefix_min_hit_pages:
                     hit = []
                 if hit:
@@ -1409,6 +1589,8 @@ class PagedServingEngine(ServingEngine):
             if fresh is None:
                 if hit:
                     self.allocator.release(hit)
+                if self._adapters is not None:       # undo the admit pin —
+                    self._adapters.unpin(req.adapter)  # the slot never took
                 break                                # pool full: stay queued
             pages = list(hit)
             if cow:
@@ -1428,6 +1610,9 @@ class PagedServingEngine(ServingEngine):
             req.admitted_at = now
             self._active[slot] = req
             self._slot_tier[slot] = self._effective_tier(req)
+            if arow is not None:
+                self._slot_pool[slot] = arow
+                self._slot_adapter[slot] = req.adapter
             self._pages[slot] = pages
             self._table[slot, : len(pages)] = pages
             self._table_dirty = True
@@ -1466,7 +1651,7 @@ class PagedServingEngine(ServingEngine):
         s = self.ecfg.max_slots
         by_slot = {slot: (req, pages, plen)
                    for slot, req, pages, plen, s0 in admitted if s0 == 0}
-        for tier, slots in self._tier_groups(by_slot):
+        for key, slots in self._tier_groups(by_slot):
             group = [(slot, *by_slot[slot]) for slot in slots]
             bucket = self._bucket(max(plen for _, _, _, plen in group))
             nb_bucket = bucket // self._bs
@@ -1474,15 +1659,17 @@ class PagedServingEngine(ServingEngine):
             lengths = np.ones((s,), np.int32)
             slot_ids = np.full((s,), s, np.int32)
             page_map = np.full((s, nb_bucket), self.num_blocks, np.int32)
+            rows = np.zeros((s,), np.int32)      # GROUP-indexed pool rows
             for i, (slot, req, pages, plen) in enumerate(group):
                 ptoks = req.prompt + req.out_tokens
                 tokens[i, :plen] = ptoks
                 lengths[i] = plen
                 slot_ids[i] = slot
+                rows[i] = self._slot_pool[slot]
                 prompt_blocks = -(-plen // self._bs)
                 page_map[i, :prompt_blocks] = pages[:prompt_blocks]
             firsts = self._prefill_admitted(
-                tokens, lengths, slot_ids, page_map, step, tier
+                tokens, lengths, slot_ids, page_map, step, key, rows
             )
             for i, (slot, req, _, _) in enumerate(group):
                 req.prefill_emitted += 1
@@ -1494,7 +1681,7 @@ class PagedServingEngine(ServingEngine):
         # a cache-off full prefill would have emitted this tick
         hits = {slot: (req, plen, s0)
                 for slot, req, _, plen, s0 in admitted if s0 > 0}
-        for tier, slots in self._tier_groups(hits):
+        for key, slots in self._tier_groups(hits):
             width = self._bucket(max(hits[x][1] - hits[x][2] for x in slots))
             tokens = np.zeros((s, width), np.int32)
             counts = np.zeros((s,), np.int32)
@@ -1508,7 +1695,7 @@ class PagedServingEngine(ServingEngine):
                 slot_ids[slot] = slot
                 starts[slot] = s0
             firsts = self._chunk_call(tokens, counts, slot_ids, starts, step,
-                                      tier)
+                                      key)
             for slot in slots:
                 req = hits[slot][0]
                 req.prefill_emitted += 1
@@ -1518,10 +1705,15 @@ class PagedServingEngine(ServingEngine):
         """Pool allocation with the prefix cache as the reclaim tail: when
         the free list cannot cover ``n``, index-only cached pages are
         reclaimed LRU-first — BEFORE any caller resorts to evicting live
-        slots."""
+        slots. Multi-tenant serving reclaims across EVERY adapter's index
+        (including indexes of since-unregistered adapters — that is how
+        their orphaned pages drain)."""
         pages = self.allocator.alloc(n)
-        if pages is None and self._prefix is not None:
-            self._prefix.reclaim(n - self.allocator.free_blocks)
+        if pages is None:
+            for pc in self._all_prefixes():
+                pc.reclaim(n - self.allocator.free_blocks)
+                if self.allocator.free_blocks >= n:
+                    break
             pages = self.allocator.alloc(n)
         return pages
 
@@ -1545,15 +1737,18 @@ class PagedServingEngine(ServingEngine):
         self.cache = self._copy_prog(self.cache, src, dst)
 
     def _prefill_admitted(self, tokens, lengths, slot_ids, page_map, step,
-                          tier: int = 0):
+                          tier: int = 0, rows=None):
         """Device portion of admission (hook: the speculative engine also
-        prefills the draft page pools here). Returns first tokens (host)."""
+        prefills the draft page pools here). ``rows`` is the GROUP-indexed
+        adapter-pool row map (batched adapter mode only; the prefill batch
+        is group-indexed, unlike the slot-indexed decode/chunk programs).
+        Returns first tokens (host)."""
         with self.metrics.measure_program(
             f"prefill[{tokens.shape[1]}]", tier,
             traces=lambda: self.prefill_traces,
         ):
             first, self.cache = self._prefill(
-                self._tier_params[tier], jnp.asarray(tokens),
+                self._call_params(tier, rows), jnp.asarray(tokens),
                 jnp.asarray(lengths), jnp.asarray(slot_ids),
                 jnp.asarray(page_map), self.cache,
                 jnp.asarray(step, jnp.int32),
@@ -1664,13 +1859,15 @@ class PagedServingEngine(ServingEngine):
     def _chunk_call(self, tokens, counts, slot_ids, starts, step,
                     tier: int = 0):
         """Device portion of a chunk tick (hook: the speculative engine also
-        runs the draft's chunk here). Returns sampled tokens (host)."""
+        runs the draft's chunk here). Chunk rows are SLOT-indexed, so the
+        batched adapter bind uses the slot→pool-row map directly. Returns
+        sampled tokens (host)."""
         with self.metrics.measure_program(
             f"chunk[{tokens.shape[1]}]", tier,
             traces=lambda: self.chunk_traces,
         ):
             first, self.cache = self._chunk_prog(
-                self._tier_params[tier], jnp.asarray(tokens),
+                self._call_params(tier, self._slot_pool), jnp.asarray(tokens),
                 jnp.asarray(counts), jnp.asarray(slot_ids),
                 jnp.asarray(starts), self._device_cache(),
                 jnp.asarray(step, jnp.int32),
@@ -1753,8 +1950,11 @@ class PagedServingEngine(ServingEngine):
         progress. The published pages' references TRANSFER to the index
         (``_release`` then only frees the exclusive tail), so finish and
         eviction both leave the prefix warm; eviction-resume reattaches these
-        pages instead of chunked re-prefill."""
-        if self._prefix is None:
+        pages instead of chunked re-prefill. Multi-tenant serving publishes
+        into the slot's ADAPTER's index — the KV is conditioned on that
+        adapter's weights and must never serve another tenant."""
+        pc = self._prefix_of(req.adapter)
+        if pc is None:
             return
         pages = self._pages.get(slot)
         if not pages:
@@ -1764,10 +1964,11 @@ class PagedServingEngine(ServingEngine):
         n_full = min(written // self._bs, len(pages))
         if n_full <= 0:
             return
-        self._prefix.publish(ptoks, pages[:n_full])
+        pc.publish(ptoks, pages[:n_full])
         del pages[:n_full]
 
     def _release(self, slot: int):
+        super()._release(slot)      # unpin the slot's adapter (base hook)
         pages = self._pages.pop(slot, None)
         if pages:
             # release, not free: attached pages fall back to their remaining
@@ -1848,6 +2049,11 @@ class ReferenceEngine:
                 f"mesh={ecfg.mesh!r} (tensor-parallel serving needs the "
                 "batched engines)"
             )
+        if ecfg.adapters or isinstance(bank, AdapterBank):
+            missing.append(
+                "multi-tenant adapters (AdapterBank serving needs the "
+                "batched engines)"
+            )
         if missing:
             raise _capability_error(type(self), arch_cfg.family, missing)
         log.info(
@@ -1903,6 +2109,7 @@ class ReferenceEngine:
                 "tier_pressure_controller": False,
                 "prefix_caching": False,
                 "tensor_parallel": False,
+                "multi_tenant_adapters": False,
             },
         }
 
@@ -1930,10 +2137,16 @@ class ReferenceEngine:
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                deadline: float | None = None,
                tier: int | None = None,
-               submitted_at: float | None = None) -> int:
+               submitted_at: float | None = None,
+               adapter: int | None = None) -> int:
         try:
             _validate_request(prompt, max_new_tokens, self.ecfg.max_len)
             t = _resolve_request_tier(self.bank, self._default_tier, tier)
+            if adapter is not None:
+                raise RequestRejected(
+                    f"adapter={adapter}: ReferenceEngine serves no adapters "
+                    "(AdapterBank needs the batched engines)"
+                )
         except RequestRejected:
             self.metrics.on_reject()
             raise

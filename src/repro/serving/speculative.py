@@ -56,7 +56,6 @@ error between observed per-slot acceptance and a target rate, clamped to
 from __future__ import annotations
 
 import json
-import warnings
 from dataclasses import dataclass
 
 import jax
@@ -222,12 +221,9 @@ class SpeculativeEngine(PagedServingEngine):
     (default 0, the largest capacity) verifies, ``ecfg.spec_draft_tier``
     (default -1, the cheapest) drafts. Both tiers share the architecture
     config, so the draft KV pages have identical geometry and ride the
-    target's block table. The deprecated ``SpeculativeEngine(arch_cfg,
-    params, draft_params, ecfg)`` form still works: the pair is wrapped as a
-    two-tier bank (target first) with a ``DeprecationWarning``. Greedy
-    decoding emits token streams identical to the non-speculative paged
-    engine; sampled decoding preserves the target distribution exactly via
-    :func:`rejection_sample`.
+    target's block table. Greedy decoding emits token streams identical to
+    the non-speculative paged engine; sampled decoding preserves the target
+    distribution exactly via :func:`rejection_sample`.
     """
 
     _speculative = True
@@ -252,22 +248,12 @@ class SpeculativeEngine(PagedServingEngine):
                 else ModelBank.single(model.cfg, model)
             ecfg = cfg_arg if cfg_arg is not None else EngineConfig()
         else:
-            if not hasattr(model, "family") or params is None \
-                    or draft_params is None:
-                raise TypeError(
-                    "SpeculativeEngine expects (bank, ecfg) — or the "
-                    "deprecated (arch_cfg, target_params, draft_params, ecfg)"
-                )
-            warnings.warn(
-                "SpeculativeEngine(arch_cfg, params, draft_params, ecfg) is "
-                "deprecated: build a ModelBank (serving/elastic.py) whose "
-                "tiers carry the target and draft budgets and construct "
-                "SpeculativeEngine(bank, ecfg)",
-                DeprecationWarning, stacklevel=2,
+            raise TypeError(
+                "SpeculativeEngine(arch_cfg, target_params, draft_params, "
+                "ecfg) was removed: build a ModelBank (serving/elastic.py) "
+                "whose tiers carry the target and draft budgets and "
+                "construct SpeculativeEngine(bank, ecfg)"
             )
-            bank = ModelBank(model, [params, draft_params],
-                             names=["target", "draft"])
-            ecfg = ecfg if ecfg is not None else EngineConfig()
         if ecfg.spec_k < 1:
             raise ValueError(
                 f"SpeculativeEngine needs spec_k >= 1, got {ecfg.spec_k}"
@@ -377,6 +363,7 @@ class SpeculativeEngine(PagedServingEngine):
             # not: every slot verifies at spec_target_tier
             elastic_tiers=False,
             tier_pressure_controller=False,
+            multi_tenant_adapters=False,
         )
         return caps
 
@@ -576,9 +563,12 @@ class SpeculativeEngine(PagedServingEngine):
     # ------------------------------------------------------------- steps ---
 
     def _prefill_admitted(self, tokens, lengths, slot_ids, page_map, step,
-                          tier: int = 0):
+                          tier: int = 0, rows=None):
         # `tier` is the base engine's grouping hook; here it is always the
-        # target tier (the draft prefills alongside in the same program)
+        # target tier (the draft prefills alongside in the same program).
+        # `rows` is the adapter-pool map — always None here: _init_common
+        # rejects AdapterBanks on speculative engines
+        del rows
         with self.metrics.measure_program(
             f"prefill[{tokens.shape[1]}]", tier,
             traces=lambda: self.prefill_traces,

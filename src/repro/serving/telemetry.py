@@ -503,6 +503,14 @@ class EngineTelemetry:
             "serve_spec_tokens_total",
             "Speculative decoding: 'drafted' proposals vs 'accepted' by the "
             "verifier", e + ("kind",))
+        self.adapter_swaps = r.counter(
+            "serve_adapter_swaps_total",
+            "Adapter-pool residency misses: host tables swapped into a "
+            "device pool row (multi-tenant AdapterBank serving)", e)
+        self.adapter_tokens = r.counter(
+            "serve_adapter_tokens_total",
+            "Tokens emitted per adapter id (multi-tenant serving)",
+            e + ("adapter",))
         self.queue_depth = r.gauge(
             "serve_queue_depth", "Requests waiting for admission", e)
         self.active_slots = r.gauge(
@@ -519,6 +527,10 @@ class EngineTelemetry:
             "Mean per-slot EMA acceptance rate over active slots", e)
         self.spec_k = r.gauge(
             "serve_spec_k", "Current draft window (adaptive k)", e)
+        self.resident_adapters = r.gauge(
+            "serve_resident_adapters",
+            "Adapters resident in the device pool (AdapterBank capacity "
+            "minus unoccupied rows)", e)
         self.kv_pool_device_bytes = r.gauge(
             "serve_kv_pool_device_bytes",
             "KV payload bytes resident per device (pools + int8 scales); "
@@ -606,6 +618,9 @@ class EngineTelemetry:
         self.spec_tokens.inc(accepted, e, "accepted")
         self.spec_accept_ema.set(ema, e)
         self.spec_k.set(k, e)
+
+    def set_resident_adapters(self, n: int):
+        self.resident_adapters.set(n, self.engine)
 
     def set_pool(self, free: int | None = None, cached: int | None = None,
                  queue: int | None = None, active: int | None = None,
@@ -718,6 +733,9 @@ class NullTelemetry(EngineTelemetry):
         pass
 
     def on_spec_tick(self, drafted, accepted, ema, k):
+        pass
+
+    def set_resident_adapters(self, n):
         pass
 
     def set_pool(self, free=None, cached=None, queue=None, active=None,

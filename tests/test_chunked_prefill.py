@@ -29,6 +29,7 @@ from repro.kernels.ref import paged_attention_kquery_ref
 from repro.models import model as model_lib
 from repro.models import transformer as transformer_lib
 from repro.models.attention import blockwise_attention
+from repro.serving.elastic import ModelBank
 from repro.serving.engine import (
     EngineCapabilityError,
     EngineConfig,
@@ -309,12 +310,12 @@ class TestChunkedEngineEquivalence:
         fully replaces the one-shot prefill program."""
         cfg, params = tiny
         ref = run_tokens(
-            ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=64))
+            ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=64))
         )
         one = run_tokens(PagedServingEngine(
-            cfg, params, EngineConfig(max_slots=2, max_len=64, block_size=8)
+            ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=64, block_size=8)
         ))
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=64, block_size=8, prefill_chunk=chunk
         ))
         got = run_tokens(eng)
@@ -329,10 +330,10 @@ class TestChunkedEngineEquivalence:
 
     def test_int8_pages(self, tiny):
         cfg, params = tiny
-        ref = run_tokens(PagedServingEngine(cfg, params, EngineConfig(
+        ref = run_tokens(PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=64, block_size=8, kv_dtype="int8"
         )))
-        got = run_tokens(PagedServingEngine(cfg, params, EngineConfig(
+        got = run_tokens(PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=64, block_size=8, kv_dtype="int8",
             prefill_chunk=16,
         )))
@@ -341,10 +342,10 @@ class TestChunkedEngineEquivalence:
     def test_pallas_kernel_path(self, tiny):
         cfg, params = tiny
         c2 = dataclasses.replace(cfg, kernel_impl="pallas")
-        dense = run_tokens(PagedServingEngine(cfg, params, EngineConfig(
+        dense = run_tokens(PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=64, block_size=8, prefill_chunk=16
         )))
-        pallas = run_tokens(PagedServingEngine(c2, params, EngineConfig(
+        pallas = run_tokens(PagedServingEngine(ModelBank.single(c2, params), EngineConfig(
             max_slots=2, max_len=64, block_size=8, prefill_chunk=16
         )))
         assert pallas == dense
@@ -354,10 +355,10 @@ class TestChunkedEngineEquivalence:
         """SpeculativeEngine chunks BOTH caches (target + draft) and still
         emits streams identical to the plain paged engine under greedy."""
         cfg, params = tiny
-        ref = run_tokens(PagedServingEngine(cfg, params, EngineConfig(
+        ref = run_tokens(PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=64, block_size=8
         )))
-        eng = SpeculativeEngine(cfg, params, params, EngineConfig(
+        eng = SpeculativeEngine(ModelBank(cfg, [params, params]), EngineConfig(
             max_slots=2, max_len=64, block_size=8, spec_k=3,
             spec_draft_mode=mode, prefill_chunk=16,
         ))
@@ -370,7 +371,7 @@ class TestChunkedEngineEquivalence:
         submitted <= admitted <= first_token <= finished always holds and
         token_times never decrease (an NTP step cannot break this)."""
         cfg, params = tiny
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=64, block_size=8, prefill_chunk=8
         ))
         for p in PROMPTS[:3]:
@@ -384,11 +385,11 @@ class TestChunkedEngineEquivalence:
     def test_invalid_chunk_rejected(self, tiny):
         cfg, params = tiny
         with pytest.raises(ValueError):
-            PagedServingEngine(cfg, params, EngineConfig(
+            PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
                 max_slots=2, max_len=64, block_size=8, prefill_chunk=12
             ))
         with pytest.raises(ValueError):
-            PagedServingEngine(cfg, params, EngineConfig(
+            PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
                 max_slots=2, max_len=64, block_size=8, prefill_chunk=0
             ))
 
@@ -397,11 +398,11 @@ class TestChunkedEngineEquivalence:
         'never silently drop a requested feature' convention)."""
         cfg, params = tiny
         with pytest.raises(EngineCapabilityError):
-            ServingEngine(cfg, params, EngineConfig(
+            ServingEngine(ModelBank.single(cfg, params), EngineConfig(
                 max_slots=2, max_len=64, prefill_chunk=16
             ))
         with pytest.raises(EngineCapabilityError):
-            ReferenceEngine(cfg, params, EngineConfig(
+            ReferenceEngine(ModelBank.single(cfg, params), EngineConfig(
                 max_slots=2, max_len=64, prefill_chunk=16
             ))
 
@@ -414,10 +415,10 @@ class TestChunkedEviction:
         prefill token, so prefill_emitted == 1 + evictions here."""
         cfg, params = tiny
         prompts = [[5, 7, 11], [3, 1, 4]]
-        e_ref = ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=16))
+        e_ref = ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=16))
         ref = run_tokens(e_ref, prompts, max_new=10)
 
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=16, block_size=4, num_blocks=4,
             decode_reserve=1, prefill_chunk=4,
         ))
@@ -445,10 +446,10 @@ class TestChunkedEviction:
         tokens."""
         cfg, params = tiny
         prompts = [list(range(2, 22)), list(range(30, 50))]   # 20 toks each
-        e_ref = ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=32))
+        e_ref = ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=32))
         ref = run_tokens(e_ref, prompts, max_new=4)
 
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=32, block_size=4, num_blocks=8,
             decode_reserve=1, prefill_chunk=4,
         ))
@@ -481,9 +482,9 @@ class TestChunkedEviction:
         victim, so both requests finish with the reference streams."""
         cfg, params = tiny
         prompts = [list(range(1, 49)), list(range(50, 98))]   # 48 toks each
-        e_ref = ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=64))
+        e_ref = ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=64))
         ref = run_tokens(e_ref, prompts, max_new=4)
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=64, block_size=8, num_blocks=9,
             prefill_chunk=8,
         ))
@@ -504,9 +505,9 @@ class TestChunkedEviction:
         cfg, params = tiny
         prompts = [list(range(1, 41)), list(range(41, 81)),
                    list(range(81, 121))]                  # 40 toks each
-        e_ref = ServingEngine(cfg, params, EngineConfig(max_slots=3, max_len=64))
+        e_ref = ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=3, max_len=64))
         ref = run_tokens(e_ref, prompts, max_new=4)
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=3, max_len=64, block_size=4, num_blocks=14,
             prefill_chunk=8,
         ))
@@ -527,9 +528,9 @@ class TestChunkedEviction:
         # the short request finishes prefill immediately and decodes while
         # the long one's chunks grow into the pool
         prompts = [list(range(2, 26)), [7, 7, 7]]
-        e_ref = ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=32))
+        e_ref = ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=32))
         ref = run_tokens(e_ref, prompts, max_new=6)
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=32, block_size=4, num_blocks=8,
             decode_reserve=1, prefill_chunk=4,
         ))
@@ -551,8 +552,8 @@ class TestEDFAdmission:
         evicted/resumed requests break ties, then FIFO."""
         cfg, params = tiny
         for eng in (
-            ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=16)),
-            PagedServingEngine(cfg, params, EngineConfig(
+            ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=16)),
+            PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
                 max_slots=2, max_len=16, block_size=8
             )),
         ):
@@ -571,7 +572,7 @@ class TestEDFAdmission:
         """The slot-padded engine used to pop FIFO ignoring deadlines; now an
         urgent late submission is admitted (and finishes) first."""
         cfg, params = tiny
-        eng = ServingEngine(cfg, params, EngineConfig(max_slots=1, max_len=32))
+        eng = ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=1, max_len=32))
         eng.submit([5, 7, 11], max_new_tokens=3, deadline=100.0)
         eng.submit([3, 1], max_new_tokens=3, deadline=50.0)
         eng.submit([8, 8, 2], max_new_tokens=3, deadline=1.0)
@@ -582,7 +583,7 @@ class TestEDFAdmission:
         """An evicted request does NOT jump an urgent fresh request with an
         earlier deadline (EDF stays primary; eviction is only a tiebreak)."""
         cfg, params = tiny
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=16, block_size=8
         ))
         eng._queue = [

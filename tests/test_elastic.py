@@ -7,8 +7,8 @@ across deployment formats, int8 KV pages, and chunked prefill; (2) a
 mid-stream tier switch (the pressure controller's downshift) is pure host
 bookkeeping: no recompilation (each tier's program compiles exactly once) and
 no KV movement (the block table and pages are tier-agnostic); (3) the old
-``Engine(arch_cfg, params, ecfg)`` constructors still work through the
-single-tier-bank shim, with a DeprecationWarning.
+``Engine(arch_cfg, params, ecfg)`` constructors are gone — they raise a
+TypeError pointing at ``ModelBank.single``.
 
 Also covers the PR 5 satellites: EngineConfig construction-time validation,
 structured ``capabilities()`` dicts inside EngineCapabilityError messages,
@@ -304,26 +304,25 @@ class TestStructuredCapabilityErrors:
         eng.submit([1, 2], max_new_tokens=2)
 
 
-# ------------------------------------------------------- deprecation shim ---
+# -------------------------------------------------------- removed ctors ---
 
 
-class TestDeprecationShim:
-    def test_old_ctor_warns_and_matches_new(self, tiny):
+class TestRemovedCtors:
+    def test_old_ctor_raises_and_message_names_bank(self, tiny):
         cfg, params = tiny
-        prompts = [[5, 7, 11], [3, 1]]
-        with pytest.warns(DeprecationWarning):
-            old = ServingEngine(cfg, params, EngineConfig(max_slots=2,
-                                                          max_len=32))
+        with pytest.raises(TypeError, match="ModelBank"):
+            ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=32))
+        # the replacement form serves fine
         new = ServingEngine(ModelBank.single(cfg, params),
                             EngineConfig(max_slots=2, max_len=32))
-        assert run_tokens(old, prompts) == run_tokens(new, prompts)
+        assert run_tokens(new, [[5, 7, 11], [3, 1]])
 
-    def test_old_paged_and_spec_ctors_warn(self, tiny):
+    def test_old_paged_and_spec_ctors_raise(self, tiny):
         cfg, params = tiny
-        with pytest.warns(DeprecationWarning):
+        with pytest.raises(TypeError, match="ModelBank"):
             PagedServingEngine(cfg, params, EngineConfig(
                 max_slots=1, max_len=16, block_size=8))
-        with pytest.warns(DeprecationWarning):
+        with pytest.raises(TypeError, match="ModelBank"):
             SpeculativeEngine(cfg, params, params, EngineConfig(
                 max_slots=1, max_len=16, block_size=8, spec_k=2))
 

@@ -16,6 +16,7 @@ from repro.kernels.ops import paged_attention
 from repro.kernels.ref import paged_attention_ref
 from repro.models import model as model_lib
 from repro.models import transformer as transformer_lib
+from repro.serving.elastic import ModelBank
 from repro.serving.engine import (
     BlockAllocator,
     EngineConfig,
@@ -207,9 +208,9 @@ class TestPagedEngine:
         """6 requests over 2 slots: admissions happen mid-stream while other
         slots are mid-decode; token streams must be identical per uid."""
         cfg, params = tiny
-        ref = self._tokens(ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=32)))
+        ref = self._tokens(ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=32)))
         got = self._tokens(PagedServingEngine(
-            cfg, params, EngineConfig(max_slots=2, max_len=32, block_size=8)
+            ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=32, block_size=8)
         ))
         assert got == ref
         assert all(len(t) == 5 for t in got.values())
@@ -220,12 +221,12 @@ class TestPagedEngine:
         request resumes by re-prefilling and must emit the same tokens."""
         cfg, params = tiny
         prompts = [[5, 7, 11], [3, 1, 4]]
-        e_ref = ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=16))
+        e_ref = ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=16))
         for p in prompts:
             e_ref.submit(p, max_new_tokens=10)
         ref = {r.uid: r.out_tokens for r in e_ref.run()}
 
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=16, block_size=4, num_blocks=4,
             decode_reserve=1, evict_policy=policy,
         ))
@@ -239,7 +240,7 @@ class TestPagedEngine:
     def test_pages_released_incrementally(self, tiny):
         """Finished requests return pages immediately (not at drain time)."""
         cfg, params = tiny
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=32, block_size=8
         ))
         eng.submit([1, 2, 3], max_new_tokens=4)
@@ -255,9 +256,9 @@ class TestPagedEngine:
     def test_rejects_oversized_requests(self, tiny):
         cfg, params = tiny
         for eng in (
-            ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=16)),
-            PagedServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=16, block_size=8)),
-            ReferenceEngine(cfg, params, EngineConfig(max_slots=2, max_len=16)),
+            ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=16)),
+            PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=16, block_size=8)),
+            ReferenceEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=16)),
         ):
             with pytest.raises(RequestRejected):
                 eng.submit(list(range(1, 20)), max_new_tokens=4)
@@ -265,7 +266,7 @@ class TestPagedEngine:
 
     def test_rejects_empty_prompt_and_tiny_pool(self, tiny):
         cfg, params = tiny
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=16, block_size=4, num_blocks=2
         ))
         with pytest.raises(RequestRejected):
@@ -281,9 +282,9 @@ class TestPagedEngine:
         and still greedy-decodes the same tokens at init scale."""
         cfg, params = tiny
         ref = self._tokens(PagedServingEngine(
-            cfg, params, EngineConfig(max_slots=2, max_len=32, block_size=8)
+            ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=32, block_size=8)
         ))
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=32, block_size=8, kv_dtype="int8"
         ))
         assert eng.cache.k.dtype == jnp.int8 and eng.cache.k_scale is not None
@@ -293,7 +294,7 @@ class TestPagedEngine:
     def test_int8_rejected_by_contiguous_engine(self, tiny):
         cfg, params = tiny
         with pytest.raises(ValueError):
-            ServingEngine(cfg, params, EngineConfig(max_slots=2, kv_dtype="int8"))
+            ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, kv_dtype="int8"))
 
     def test_pallas_kernel_through_engine(self, tiny):
         """kernel_impl='pallas' routes paged decode through the Pallas kernel
@@ -304,7 +305,7 @@ class TestPagedEngine:
         out = {}
         for impl in ("dense", "pallas"):
             c = dataclasses.replace(cfg, kernel_impl=impl)
-            eng = PagedServingEngine(c, params, EngineConfig(
+            eng = PagedServingEngine(ModelBank.single(c, params), EngineConfig(
                 max_slots=2, max_len=32, block_size=8
             ))
             eng.submit([5, 7, 11], max_new_tokens=4)
@@ -316,7 +317,7 @@ class TestPagedEngine:
         """The paged engine keeps the PR 1 invariant: ONE jitted decode step
         per tick over all slots, compiled exactly once."""
         cfg, params = tiny
-        eng = PagedServingEngine(cfg, params, EngineConfig(
+        eng = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=32, block_size=8
         ))
         got = self._tokens(eng)

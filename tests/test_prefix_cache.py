@@ -79,7 +79,7 @@ def run_streams(engine, prompts, max_new=6):
 def paired_engines(tiny, **kw):
     cfg, params = tiny
     mk = lambda pc: PagedServingEngine(
-        cfg, params, EngineConfig(max_slots=4, max_len=96, prefix_cache=pc, **kw)
+        ModelBank.single(cfg, params), EngineConfig(max_slots=4, max_len=96, prefix_cache=pc, **kw)
     )
     return mk(False), mk(True)
 
@@ -336,7 +336,7 @@ class TestEvictionResume:
         sampled tokens still agree bitwise."""
         cfg, params = tiny
         mk = lambda pc: PagedServingEngine(
-            cfg, params, EngineConfig(max_slots=4, max_len=96, greedy=False,
+            ModelBank.single(cfg, params), EngineConfig(max_slots=4, max_len=96, greedy=False,
                                       temperature=0.8, prefix_cache=pc)
         )
         off, on = mk(False), mk(True)
@@ -350,7 +350,7 @@ class TestEvictionResume:
         the engine touches live slots)."""
         cfg, params = tiny
         mk = lambda pc: PagedServingEngine(
-            cfg, params, EngineConfig(max_slots=3, max_len=96, num_blocks=14,
+            ModelBank.single(cfg, params), EngineConfig(max_slots=3, max_len=96, num_blocks=14,
                                       prefix_cache=pc)
         )
         off, on = mk(False), mk(True)
@@ -373,7 +373,7 @@ class TestSpeculativeEquivalence:
         cfg, params = tiny
         draft = model_lib.init_params(cfg, jax.random.PRNGKey(1))
         mk = lambda pc: SpeculativeEngine(
-            cfg, params, draft,
+            ModelBank(cfg, [params, draft]),
             EngineConfig(max_slots=4, max_len=96, spec_k=3, prefix_cache=pc),
         )
         off, on = mk(False), mk(True)
@@ -386,7 +386,7 @@ class TestSpeculativeEquivalence:
         cfg, params = tiny
         draft = model_lib.init_params(cfg, jax.random.PRNGKey(1))
         mk = lambda pc: SpeculativeEngine(
-            cfg, params, draft,
+            ModelBank(cfg, [params, draft]),
             EngineConfig(max_slots=4, max_len=96, spec_k=3, prefill_chunk=16,
                          prefix_cache=pc),
         )
@@ -403,12 +403,12 @@ class TestCapabilityGates:
     def test_batched_engine_rejects_prefix_cache(self, tiny):
         cfg, params = tiny
         with pytest.raises(EngineCapabilityError, match="page pool"):
-            ServingEngine(cfg, params, EngineConfig(prefix_cache=True))
+            ServingEngine(ModelBank.single(cfg, params), EngineConfig(prefix_cache=True))
 
     def test_reference_engine_rejects_prefix_cache(self, tiny):
         cfg, params = tiny
         with pytest.raises(EngineCapabilityError, match="prefix_cache"):
-            ReferenceEngine(cfg, params, EngineConfig(prefix_cache=True))
+            ReferenceEngine(ModelBank.single(cfg, params), EngineConfig(prefix_cache=True))
 
     def test_config_validates_min_hit_pages(self):
         with pytest.raises(ValueError, match="prefix_min_hit_pages"):

@@ -145,6 +145,18 @@ class TestShardedParity:
             assert drive(eng, tiers) == base, (name, spec)
             assert eng.stats_snapshot()["jit_retraces"] == 0, (name, spec)
 
+    def test_data_axis_parity(self, trained):
+        """Batch parallelism: the 'data' axis replicates weights and KV
+        pools and shards only the in-flight batch, alone or combined with
+        'model' — greedy streams stay identical and nothing retraces."""
+        *_, bank = trained
+        for kw in ({}, dict(prefix_cache=True)):
+            base = drive(PagedServingEngine(bank, ecfg(**kw)))
+            for spec in ("data=2", "model=2,data=2"):
+                eng = PagedServingEngine(bank, ecfg(mesh=spec, **kw))
+                assert drive(eng) == base, (kw, spec)
+                assert eng.stats_snapshot()["jit_retraces"] == 0, (kw, spec)
+
     def test_pallas_kernel_paths(self, trained):
         """kernel_impl='pallas' routes decode through the scalar-prefetch
         paged kernel and chunked prefill through the k-wide variant — both
@@ -206,6 +218,23 @@ class TestShardingInvariants:
             per_dev[n] = next(iter(bytes_by_dev.values()))
         # equal total budget -> per-device residency shrinks with the axis
         assert per_dev[4] * 2 == per_dev[2]
+
+    def test_data_axis_replicates_pools(self, trained):
+        """'data' carries the batch only: payload pools stay replicated —
+        each data replica holds the FULL pool, so per-device residency is
+        2x the model=2 placement (which splits the head axis) and the spec
+        carries no mesh axis."""
+        *_, bank = trained
+        eng = PagedServingEngine(bank, ecfg(mesh="data=2"))
+        assert eng.cache.k.sharding.spec == P()
+        drive(eng, tiers=True)
+        data_bytes = _kv_pool_device_bytes(eng.cache)
+        assert len(data_bytes) == 2
+        assert len(set(data_bytes.values())) == 1
+        model_bytes = _kv_pool_device_bytes(
+            PagedServingEngine(bank, ecfg(mesh="model=2")).cache)
+        assert next(iter(data_bytes.values())) \
+            == 2 * next(iter(model_bytes.values()))
 
     def test_allocator_and_prefix_cache_unchanged(self, trained):
         """Block accounting and radix-cache hits are pure host bookkeeping:

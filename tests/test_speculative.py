@@ -24,6 +24,7 @@ from repro.kernels.ops import paged_attention, paged_attention_kquery
 from repro.kernels.ref import paged_attention_kquery_ref
 from repro.models import model as model_lib
 from repro.models import transformer as transformer_lib
+from repro.serving.elastic import ModelBank
 from repro.serving.engine import (
     EngineCapabilityError,
     EngineConfig,
@@ -234,7 +235,7 @@ class TestSpeculativeEngine:
     def _spec(self, cfg, params, draft, **kw):
         base = dict(max_slots=2, max_len=32, block_size=8, spec_k=4)
         base.update(kw)
-        return SpeculativeEngine(cfg, params, draft, EngineConfig(**base))
+        return SpeculativeEngine(ModelBank(cfg, [params, draft]), EngineConfig(**base))
 
     @pytest.mark.parametrize("mode", ["parallel", "sequential"])
     def test_greedy_identical_draft_matches_paged(self, tiny, mode):
@@ -243,7 +244,7 @@ class TestSpeculativeEngine:
         BOTH draft schedules."""
         cfg, params, _ = tiny
         ref = self._tokens(PagedServingEngine(
-            cfg, params, EngineConfig(max_slots=2, max_len=32, block_size=8)
+            ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=32, block_size=8)
         ))
         eng = self._spec(cfg, params, params, spec_draft_mode=mode)
         got = self._tokens(eng)
@@ -262,7 +263,7 @@ class TestSpeculativeEngine:
         greedy token."""
         cfg, params, adversarial = tiny
         ref = self._tokens(PagedServingEngine(
-            cfg, params, EngineConfig(max_slots=2, max_len=32, block_size=8)
+            ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=32, block_size=8)
         ))
         eng = self._spec(cfg, params, adversarial, spec_draft_mode=mode)
         got = self._tokens(eng)
@@ -286,14 +287,14 @@ class TestSpeculativeEngine:
         BOTH caches) reproduces the non-speculative streams exactly."""
         cfg, params, adversarial = tiny
         prompts = [[5, 7, 11], [3, 1, 4]]
-        e_ref = PagedServingEngine(cfg, params, EngineConfig(
+        e_ref = PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=16, block_size=4
         ))
         for p in prompts:
             e_ref.submit(p, max_new_tokens=10)
         ref = {r.uid: r.out_tokens for r in e_ref.run()}
 
-        eng = SpeculativeEngine(cfg, params, adversarial, EngineConfig(
+        eng = SpeculativeEngine(ModelBank(cfg, [params, adversarial]), EngineConfig(
             max_slots=2, max_len=16, block_size=4, num_blocks=4,
             decode_reserve=1, evict_policy=policy, spec_k=3,
         ))
@@ -308,7 +309,7 @@ class TestSpeculativeEngine:
         """Quantized target pages + speculation: the k-wide quantized insert
         must match the baseline int8 paged engine token-for-token."""
         cfg, params, _ = tiny
-        ref = self._tokens(PagedServingEngine(cfg, params, EngineConfig(
+        ref = self._tokens(PagedServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=2, max_len=32, block_size=8, kv_dtype="int8"
         )))
         eng = self._spec(cfg, params, params, kv_dtype="int8")
@@ -359,7 +360,7 @@ class TestSpeculativeEngine:
     def test_rejects_spec_k_zero(self, tiny):
         cfg, params, _ = tiny
         with pytest.raises(ValueError):
-            SpeculativeEngine(cfg, params, params, EngineConfig(spec_k=0))
+            SpeculativeEngine(ModelBank(cfg, [params, params]), EngineConfig(spec_k=0))
 
     def test_k1_auto_routes_to_sequential(self, tiny):
         """A k=1 parallel window has no verifiable guess (two forwards per
@@ -392,7 +393,7 @@ class TestSpecController:
             c.update(0.0)
         assert c.k == 2
         cfg, params, adversarial = tiny
-        eng = SpeculativeEngine(cfg, params, adversarial, EngineConfig(
+        eng = SpeculativeEngine(ModelBank(cfg, [params, adversarial]), EngineConfig(
             max_slots=2, max_len=64, block_size=8, spec_k=6, spec_adaptive=True
         ))
         assert eng._parallel and eng.controller.k_min == 2
@@ -409,7 +410,7 @@ class TestPerSlotPRNG:
         """Same logits + same slot id => same sample; different slot ids =>
         independent streams (and the greedy path ignores slots entirely)."""
         cfg, params, _ = tiny
-        eng = ServingEngine(cfg, params, EngineConfig(
+        eng = ServingEngine(ModelBank.single(cfg, params), EngineConfig(
             max_slots=4, max_len=32, greedy=False, temperature=1.0
         ))
         logits = jnp.tile(
@@ -426,7 +427,7 @@ class TestPerSlotPRNG:
 
     def test_greedy_untouched(self, tiny):
         cfg, params, _ = tiny
-        eng = ServingEngine(cfg, params, EngineConfig(max_slots=2, max_len=32))
+        eng = ServingEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=2, max_len=32))
         logits = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.vocab_size))
         out = eng._sample(logits, jnp.asarray(0), salt=0)
         assert np.array_equal(np.asarray(out), np.asarray(jnp.argmax(logits, -1)))
@@ -436,9 +437,9 @@ class TestReferenceEngineCapabilities:
     def test_paged_only_features_rejected(self, tiny):
         cfg, params, _ = tiny
         with pytest.raises(EngineCapabilityError):
-            ReferenceEngine(cfg, params, EngineConfig(kv_dtype="int8"))
+            ReferenceEngine(ModelBank.single(cfg, params), EngineConfig(kv_dtype="int8"))
         with pytest.raises(EngineCapabilityError):
-            ReferenceEngine(cfg, params, EngineConfig(spec_k=4))
+            ReferenceEngine(ModelBank.single(cfg, params), EngineConfig(spec_k=4))
 
     def test_non_speculative_engines_reject_spec_k(self, tiny):
         """spec_k must never be silently ignored: only SpeculativeEngine
@@ -446,7 +447,7 @@ class TestReferenceEngineCapabilities:
         cfg, params, _ = tiny
         for cls in (ServingEngine, PagedServingEngine):
             with pytest.raises(EngineCapabilityError):
-                cls(cfg, params, EngineConfig(max_slots=2, spec_k=4))
+                cls(ModelBank.single(cfg, params), EngineConfig(max_slots=2, spec_k=4))
 
     def test_capability_error_is_request_rejected(self):
         """One error path for callers: capability errors reject like requests."""
@@ -454,6 +455,6 @@ class TestReferenceEngineCapabilities:
 
     def test_plain_reference_engine_still_serves(self, tiny):
         cfg, params, _ = tiny
-        eng = ReferenceEngine(cfg, params, EngineConfig(max_slots=1, max_len=16))
+        eng = ReferenceEngine(ModelBank.single(cfg, params), EngineConfig(max_slots=1, max_len=16))
         eng.submit([1, 2, 3], max_new_tokens=2)
         assert len(eng.run()) == 1
